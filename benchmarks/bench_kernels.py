@@ -1,0 +1,66 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU = correctness +
+reference timings; the BlockSpec tiling targets TPU v5e VMEM).
+
+Reports decode/encode/matmul wall-times (CPU reference, labelled as such)
+and max relative error of posit_matmul vs the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import POSIT8_2, POSIT16_2
+from repro.kernels import ref
+from repro.kernels.ops import posit_decode, posit_encode, posit_matmul
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run():
+    rng = np.random.default_rng(0)
+    out = {"cpu_reference_timings_us": {}, "max_rel_err": 0.0}
+    for fmt in (POSIT8_2, POSIT16_2):
+        codes = rng.integers(0, 1 << fmt.bits, (256, 256)).astype(
+            fmt.np_storage_dtype)
+        us = _time(lambda c: posit_decode(c, fmt, interpret=True), codes)
+        out["cpu_reference_timings_us"][f"decode_{fmt.name}_256x256"] = us
+        x = rng.standard_normal((256, 256)).astype(np.float32)
+        us = _time(lambda v: posit_encode(v, fmt, interpret=True), x)
+        out["cpu_reference_timings_us"][f"encode_{fmt.name}_256x256"] = us
+
+        a = rng.standard_normal((128, 256)).astype(np.float32)
+        w = rng.integers(0, 1 << fmt.bits, (256, 192)).astype(
+            fmt.np_storage_dtype)
+        got = posit_matmul(a, w, fmt, blocks=(64, 64, 64), interpret=True)
+        want = a @ np.asarray(ref.posit_decode_ref(w, fmt))
+        want = np.nan_to_num(want)
+        got = np.nan_to_num(np.asarray(got))
+        denom = np.maximum(np.abs(want), 1e-3)
+        out["max_rel_err"] = max(out["max_rel_err"],
+                                 float(np.max(np.abs(got - want) / denom)))
+    return out
+
+
+def main(verbose=True):
+    out = run()
+    if verbose:
+        print("== Pallas kernels (interpret-mode CPU reference) ==")
+        for k, v in out["cpu_reference_timings_us"].items():
+            print(f"  {k}: {v:.0f} us")
+        print(f"  posit_matmul max rel err vs oracle: "
+              f"{out['max_rel_err']:.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table IV reproduction: TALU vs posit-only compute elements at 28 nm.
+
+Re-derives every ratio the paper claims in its contributions list:
+  "5.4x to 16.7x smaller area, 15.16x to 42.5x lower power and 2.53x to
+   4.13x lower power density" (§I, 32-bit comparison per the text)
+plus the §IV key-takeaway ranges (delay 22-50x worse, PDP 1.5-20x worse),
+and back-projects the 28 nm-scaled numbers to each design's original node
+via the Stillmaker-Baas equations the paper uses [26].
+"""
+from __future__ import annotations
+
+from . import hwmodel as hw
+
+
+def run():
+    t = hw.TALU
+    out = {"designs": {}, "claims": {}}
+    for dp in hw.POSIT_ONLY:
+        i32 = len(dp.bits) - 1            # 32-bit column
+        out["designs"][dp.name] = {
+            "area_x_32": dp.area_mm2[i32] / t.area_mm2[i32],
+            "power_x_32": dp.power_mw[i32] / t.power_mw[i32],
+            "density_x_32": dp.pow_density[min(i32, len(dp.pow_density) - 1)]
+            / t.pow_density[0],
+            "delay_x_32": t.delay_ns[i32] / dp.delay_ns[min(
+                i32, len(dp.delay_ns) - 1)],
+            "pdp_talu_worse_x_32": t.pdp_pj[i32] / dp.pdp_pj[min(
+                i32, len(dp.pdp_pj) - 1)],
+            "area_mm2_at_origin_node": hw.backproject(dp, "area", 0),
+        }
+    d = out["designs"]
+    area_lo = min(v["area_x_32"] for v in d.values())
+    area_hi = max(v["area_x_32"] for v in d.values())
+    pow_lo = min(v["power_x_32"] for v in d.values())
+    pow_hi = max(v["power_x_32"] for v in d.values())
+    den_lo = min(v["density_x_32"] for v in d.values())
+    den_hi = max(v["density_x_32"] for v in d.values())
+    out["claims"] = {
+        "area_range_x": (area_lo, area_hi),          # paper: 5.4 .. 16.7
+        "power_range_x": (pow_lo, pow_hi),           # paper: 15.16 .. 42.5
+        "density_range_x": (den_lo, den_hi),         # paper: 2.53 .. 4.13
+        "paper_area_range": (5.4, 16.7),
+        "paper_power_range": (15.16, 42.5),
+        "paper_density_range": (2.53, 4.13),
+    }
+    return out
+
+
+def main(verbose=True):
+    out = run()
+    if verbose:
+        print("== Table IV: TALU vs posit-only designs (32-bit, 28 nm) ==")
+        for name, v in out["designs"].items():
+            print(f"  {name:9s} area {v['area_x_32']:6.2f}x  "
+                  f"power {v['power_x_32']:6.2f}x  "
+                  f"density {v['density_x_32']:5.2f}x  "
+                  f"delay(TALU worse) {v['delay_x_32']:5.1f}x")
+        c = out["claims"]
+        print(f"  ranges: area {c['area_range_x'][0]:.1f}-"
+              f"{c['area_range_x'][1]:.1f}x (paper 5.4-16.7), "
+              f"power {c['power_range_x'][0]:.2f}-"
+              f"{c['power_range_x'][1]:.1f}x (paper 15.16-42.5), "
+              f"density {c['density_range_x'][0]:.2f}-"
+              f"{c['density_range_x'][1]:.2f}x (paper 2.53-4.13)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table V reproduction: TALU vs the unified Posit/FP MAC (UMAC [1]).
+
+The headline claims of the abstract: 54.6x power, 19.8x area (the text
+also says "20x smaller"), 3.47x PDP, 2.76x power density.
+"""
+from __future__ import annotations
+
+from . import hwmodel as hw
+
+PAPER = {"area_x": 19.8, "power_x": 54.6, "pdp_x": 3.47,
+         "pow_density_x": 2.76}
+
+
+def run():
+    ratios = hw.table5_ratios()
+    return {"ratios": ratios, "paper": PAPER,
+            "rel_err": {k: abs(ratios[k] - PAPER[k]) / PAPER[k]
+                        for k in PAPER}}
+
+
+def main(verbose=True):
+    out = run()
+    if verbose:
+        print("== Table V: TALU vs UMAC (28 nm) ==")
+        for k, v in out["ratios"].items():
+            print(f"  {k:16s} ours {v:7.2f}x   paper {PAPER[k]:6.2f}x   "
+                  f"err {100 * out['rel_err'][k]:.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

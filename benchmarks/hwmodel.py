@@ -1,0 +1,182 @@
+"""Analytical hardware model reproducing the paper's evaluation tables.
+
+The paper's numbers are ASIC synthesis/P&R results — not runnable in
+software — so this module encodes the published per-design constants
+(Tables IV & V) plus the Stillmaker-Baas technology-scaling method the
+paper uses [26], and re-derives every ratio the paper claims.  Fitted
+parameters (where the paper's microarchitectural detail is unpublished)
+are explicit, documented, and bounded:
+
+* ``UMAC_V_UTILIZATION`` — UMAC-V sustained fraction of peak on 3x3 MATMUL
+  kernels.  The paper reports only the end ratio (0.93x throughput); the
+  structural bounds are [0.16 (full 6-stage drain per kernel), 1.0
+  (perfect pipelining)]; 0.41 reproduces Table VI.
+* ``RISCY_POWER_MW``     — RISCY core power added to both vector systems.
+  89 mW reproduces Table VI's 1.98x energy efficiency and sits inside the
+  published RISCY envelope (~30-120 mW at 28 nm, [11]).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Published design points (paper Tables IV & V, all scaled to 28 nm)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    name: str
+    node_nm: int                 # original technology node
+    freq_ghz: float
+    bits: tuple
+    delay_ns: tuple              # per bits entry
+    area_mm2: tuple
+    power_mw: tuple
+    pdp_pj: tuple
+    pow_density: tuple           # mW/mm^2
+    formats: str = "posit"
+
+
+TALU = DesignPoint(
+    name="TALU", node_nm=28, freq_ghz=2.0, bits=(8, 16, 32),
+    delay_ns=(21.5, 24, 25.5), area_mm2=(0.0026,) * 3,
+    power_mw=(1.81,) * 3, pdp_pj=(38.9, 43.44, 46.15),
+    pow_density=(696.15,) * 3, formats="posit+fp+int")
+
+VMULT = DesignPoint(
+    name="VMULT", node_nm=90, freq_ghz=0.4, bits=(8, 16, 32),
+    delay_ns=(0.71,) * 3, area_mm2=(0.014,) * 3, power_mw=(42.94,) * 3,
+    pdp_pj=(30.7,) * 3, pow_density=(2878.62,) * 3)
+
+DFMA = DesignPoint(
+    name="DFMA", node_nm=45, freq_ghz=0.8, bits=(8, 16, 32),
+    delay_ns=(0.75, 0.93, 1.12), area_mm2=(0.0044, 0.0145, 0.0435),
+    power_mw=(13.77, 32.4, 76.95), pdp_pj=(10.28, 30.24, 86.18),
+    pow_density=(3155.0, 2227.5, 1767.1))
+
+FUSED_MAC = DesignPoint(
+    name="FusedMAC", node_nm=45, freq_ghz=1.0, bits=(8, 16, 32),
+    delay_ns=(0.50, 0.47, 0.63), area_mm2=(0.0023, 0.006, 0.015),
+    power_mw=(3.92, 9.5, 27.44), pdp_pj=(1.97, 4.55, 17.41),
+    pow_density=(1724.97, 1609.28, 1829.52))
+
+UMAC = DesignPoint(
+    name="UMAC", node_nm=28, freq_ghz=0.667, bits=(8, 16, 32),
+    delay_ns=(1.5,) * 3, area_mm2=(0.0515,) * 3, power_mw=(99.0,) * 3,
+    pdp_pj=(148.5,) * 3, pow_density=(1941.17,) * 3, formats="posit+fp")
+
+POSIT_ONLY = (VMULT, DFMA, FUSED_MAC)
+
+
+# ---------------------------------------------------------------------------
+# Stillmaker-Baas scaling [26]: area ~ s^2, delay ~ s, power ~ s * v^2
+# (general-purpose fits; the paper applies this to normalize 90/45 nm
+#  designs to 28 nm — Table IV carries the POST-scaling values, so this
+#  function is used for consistency checks / original-node back-projection)
+# ---------------------------------------------------------------------------
+
+def scale_to(node_from_nm: float, node_to_nm: float) -> Dict[str, float]:
+    s = node_to_nm / node_from_nm
+    return {"area": s ** 2, "delay": s, "power": s}   # iso-V_dd first order
+
+
+def backproject(dp: DesignPoint, metric: str, idx: int) -> float:
+    """Original-node value implied by the paper's 28 nm-scaled number."""
+    f = scale_to(dp.node_nm, 28.0)[metric]
+    val = getattr(dp, {"area": "area_mm2", "delay": "delay_ns",
+                       "power": "power_mw"}[metric])[idx]
+    return val / f
+
+
+# ---------------------------------------------------------------------------
+# Table V ratios (TALU vs UMAC) — the headline claims
+# ---------------------------------------------------------------------------
+
+def table5_ratios() -> Dict[str, float]:
+    pdp_talu = sum(TALU.pdp_pj) / len(TALU.pdp_pj)
+    return {
+        "area_x": UMAC.area_mm2[0] / TALU.area_mm2[0],          # 19.8x
+        "power_x": UMAC.power_mw[0] / TALU.power_mw[0],         # 54.6x
+        "pdp_x": UMAC.pdp_pj[0] / pdp_talu,                     # 3.47x
+        "pow_density_x": UMAC.pow_density[0] / TALU.pow_density[0],  # 2.76x
+    }
+
+
+def table4_ratios() -> Dict[str, Dict[str, float]]:
+    """TALU vs each posit-only design (paper: 5.4-16.7x area,
+    15.16-42.5x power (the '2x to 43x' §IV text includes FusedMAC-8),
+    2.53-4.13x power density)."""
+    out = {}
+    for dp in POSIT_ONLY:
+        out[dp.name] = {
+            "area_x": max(dp.area_mm2) / TALU.area_mm2[0]
+            if dp.name != "VMULT" else dp.area_mm2[0] / TALU.area_mm2[0],
+            "area_x_min": min(dp.area_mm2) / TALU.area_mm2[0],
+            "power_x": max(dp.power_mw) / TALU.power_mw[0],
+            "power_x_min": min(dp.power_mw) / TALU.power_mw[0],
+            "density_x": max(dp.pow_density) / TALU.pow_density[0],
+            "density_x_min": min(dp.pow_density) / TALU.pow_density[0],
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Table VI: equi-area TALU-V vs UMAC-V on 3x3 MATMUL (P(8,2))
+# ---------------------------------------------------------------------------
+
+RISCY_POWER_MW = 89.0        # fitted (see module docstring)
+UMAC_V_UTILIZATION = 0.41    # fitted (see module docstring)
+
+N_TALU_LANES = 128           # 1024-bit RF / 8-bit operands (paper §IV-D)
+N_UMAC_UNITS = 6             # equi-area: 6 x 0.0515 ~= 128 x 0.0026 mm^2
+UMAC_MACS_PER_CYCLE = 4      # "8 x 4 produced per cycle" (8-bit mode)
+
+
+def talu_v_throughput(mul_cyc: int = 19, add_cyc: int = 23,
+                      kernel_macs: int = 27) -> float:
+    """3x3 MATMUL kernels/s: 128 SIMD lanes, each MAC = mul+add cycles."""
+    macs_per_s = N_TALU_LANES * TALU.freq_ghz * 1e9 / (mul_cyc + add_cyc)
+    return macs_per_s / kernel_macs
+
+
+def umac_v_throughput(kernel_macs: int = 27,
+                      utilization: float = UMAC_V_UTILIZATION) -> float:
+    macs_per_s = (N_UMAC_UNITS * UMAC_MACS_PER_CYCLE * UMAC.freq_ghz * 1e9
+                  * utilization)
+    return macs_per_s / kernel_macs
+
+
+def table6_ratios() -> Dict[str, float]:
+    thr_t = talu_v_throughput()
+    thr_u = umac_v_throughput()
+    p_t = N_TALU_LANES * TALU.power_mw[0] + RISCY_POWER_MW       # mW
+    p_u = N_UMAC_UNITS * UMAC.power_mw[0] + RISCY_POWER_MW
+    eff_t = thr_t / (p_t * 1e-3)     # kernels / J
+    eff_u = thr_u / (p_u * 1e-3)
+    return {
+        "throughput_x": thr_t / thr_u,                  # paper: 0.93x
+        "energy_eff_x": eff_t / eff_u,                  # paper: 1.98x
+        "talu_v_kernels_per_s": thr_t,
+        "umac_v_kernels_per_s": thr_u,
+        "talu_v_power_mw": p_t, "umac_v_power_mw": p_u,
+        "equi_area_talu_mm2": N_TALU_LANES * TALU.area_mm2[0],
+        "equi_area_umac_mm2": N_UMAC_UNITS * UMAC.area_mm2[0],
+    }
+
+
+def table6_sensitivity() -> Dict[str, Dict[str, float]]:
+    """How the Table VI ratios move across the fitted-parameter bounds."""
+    out = {}
+    for util in (0.16, 0.41, 1.0):
+        thr_ratio = talu_v_throughput() / umac_v_throughput(utilization=util)
+        out[f"util={util}"] = {"throughput_x": thr_ratio}
+    for p_riscy in (0.0, 89.0, 150.0):
+        thr_t, thr_u = talu_v_throughput(), umac_v_throughput()
+        p_t = N_TALU_LANES * TALU.power_mw[0] + p_riscy
+        p_u = N_UMAC_UNITS * UMAC.power_mw[0] + p_riscy
+        out[f"riscy={p_riscy}mW"] = {
+            "energy_eff_x": (thr_t / p_t) / (thr_u / p_u)}
+    return out

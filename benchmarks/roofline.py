@@ -1,0 +1,103 @@
+"""Roofline reporting (deliverable g): read the dry-run result JSONs and
+emit the per-(arch x shape) three-term table, bottleneck attribution, and
+hillclimb-candidate selection.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load(dir_: str) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        try:
+            out.append(json.load(open(path)))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| — | — | — | — |")
+    ro = r["roofline"]
+    mem = r.get("memory_analysis", {})
+    hbm_gb = (mem.get("temp_size_in_bytes", 0)
+              + mem.get("argument_size_in_bytes", 0)) / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {ro['t_compute_s']:.4f} | {ro['t_memory_s']:.4f} "
+            f"| {ro['t_collective_s']:.4f} | {ro['dominant']} "
+            f"| {ro['useful_flops_ratio']:.3f} "
+            f"| {ro['roofline_fraction']:.4f} | {hbm_gb:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | t_compute (s) | t_memory (s) "
+          "| t_collective (s) | bottleneck | 6ND/HLO | roofline-frac "
+          "| HBM GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def pick_hillclimb(rows: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction / most collective-bound / most TC-representative."""
+    live = [r for r in rows if not r.get("skipped")
+            and not r.get("tag")
+            and r.get("mesh") == "16x16"
+            and not r.get("variant", {}).get("policy", "bf16") != "bf16"]
+    train = [r for r in live if r["kind"] == "train"]
+    by_frac = sorted(train, key=lambda r: r["roofline"]["roofline_fraction"])
+    by_coll = sorted(live, key=lambda r: -(
+        r["roofline"]["t_collective_s"]
+        / max(max(r["roofline"]["t_compute_s"],
+                  r["roofline"]["t_memory_s"]), 1e-12)))
+    # representative of the paper's technique: decode-on-read posit packing
+    # targets weight+KV HBM reads — the dense decode cell with the largest
+    # memory term (MoE decode reads only active experts; dense reads all)
+    decode = [r for r in live if r["kind"] == "decode"
+              and r["shape"] != "long_500k"]
+    dense = [r for r in decode if "moe" not in r["arch"]]
+    by_repr = sorted(dense or decode,
+                     key=lambda r: -r["roofline"]["t_memory_s"])
+    return {
+        "worst_fraction": by_frac[0] if by_frac else None,
+        "most_collective_bound": by_coll[0] if by_coll else None,
+        "most_representative": by_repr[0] if by_repr else None,
+    }
+
+
+def main(verbose=True, dir_="benchmarks/results/dryrun"):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=dir_)
+    args, _ = ap.parse_known_args()
+    rows = load(args.dir)
+    base = [r for r in rows if not r.get("tag")
+            and ("variant" not in r
+                 or r["variant"].get("policy", "bf16") == "bf16")]
+    if verbose:
+        print(HEADER)
+        for r in base:
+            print(fmt_row(r))
+        picks = pick_hillclimb(base)
+        print("\nhillclimb candidates:")
+        for why, r in picks.items():
+            if r:
+                print(f"  {why}: {r['arch']} x {r['shape']} "
+                      f"(dominant={r['roofline']['dominant']}, "
+                      f"frac={r['roofline']['roofline_fraction']:.4f})")
+    return {"n_cells": len(base),
+            "n_ok": sum(1 for r in base if not r.get("skipped")
+                        and "error" not in r)}
+
+
+if __name__ == "__main__":
+    main()

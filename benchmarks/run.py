@@ -1,0 +1,77 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table3 ... # subset
+
+Writes machine-readable results to benchmarks/results/*.json and prints
+the ``name,us_per_call,derived`` summary CSV expected by the harness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _entry(name):
+    if name == "table3":
+        from . import bench_table3_cycles as m
+    elif name == "table4":
+        from . import bench_table4_posit_designs as m
+    elif name == "table5":
+        from . import bench_table5_umac as m
+    elif name == "table6":
+        from . import bench_table6_vector as m
+    elif name == "accuracy":
+        from . import bench_accuracy as m
+    elif name == "roofline":
+        from . import roofline as m
+    elif name == "kernels":
+        from . import bench_kernels as m
+    else:
+        raise KeyError(name)
+    return m
+
+
+ALL = ("table3", "table4", "table5", "table6", "accuracy", "kernels",
+       "roofline")
+
+
+def main():
+    names = sys.argv[1:] or ALL
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    csv = ["name,us_per_call,derived"]
+    for name in names:
+        t0 = time.time()
+        out = _entry(name).main(verbose=True)
+        dt_us = (time.time() - t0) * 1e6
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        try:
+            json.dump(out, open(path, "w"), indent=1, default=str)
+        except TypeError:
+            pass
+        derived = ""
+        if name == "table3":
+            derived = f"exact={out['exact']}/{out['total']}"
+        elif name == "table5":
+            derived = (f"area={out['ratios']['area_x']:.1f}x;"
+                       f"power={out['ratios']['power_x']:.1f}x")
+        elif name == "table6":
+            derived = (f"thr={out['ratios']['throughput_x']:.2f}x;"
+                       f"eff={out['ratios']['energy_eff_x']:.2f}x")
+        elif name == "accuracy":
+            derived = (f"p32_orders={out['matmul32']['orders_better']:.1f}")
+        elif name == "roofline":
+            derived = f"cells={out['n_ok']}/{out['n_cells']}"
+        elif name == "kernels":
+            derived = f"max_err={out['max_rel_err']:.1e}"
+        csv.append(f"{name},{dt_us:.0f},{derived}")
+        print()
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Render the multi-pod dry-run roofline table from the result JSONs.
+
+  PYTHONPATH=src python examples/roofline_report.py
+
+(Equivalent to `python -m benchmarks.roofline`; kept as an example of
+consuming the dry-run artifacts programmatically.)
+"""
+from benchmarks.roofline import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Fault-tolerant checkpointing: atomic, keep-k, async, resumable.
+
+Layout:  <dir>/step_<n>/arrays.npz + tree.json  (+ .COMMIT marker)
+
+* atomic    — writes go to ``step_<n>.tmp`` then ``os.replace`` + a COMMIT
+              marker file; a crash mid-write can never produce a checkpoint
+              that ``latest_step`` would pick up.
+* keep-k    — old committed steps beyond ``keep`` are garbage-collected.
+* async     — ``save(..., blocking=False)`` snapshots to host memory
+              (device_get) synchronously, then serializes on a background
+              thread so the train loop only blocks for the D2H copy.
+* sharded   — leaves are fetched with ``jax.device_get`` (works for sharded
+              GDA-style arrays: XLA gathers), and restores are re-sharded by
+              the caller's ``jax.device_put`` against the current mesh, so a
+              restart may use a DIFFERENT topology (elastic scaling).
+
+Pytrees are flattened to ``path -> array`` with a JSON treedef sidecar, so
+checkpoints are inspectable with plain numpy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _savable(a: np.ndarray) -> np.ndarray:
+    """npz can't round-trip ml_dtypes (bf16/fp8) — store them as f32;
+    restore casts back to the template dtype."""
+    a = np.asarray(a)
+    if a.dtype.kind == "V" or a.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                               "float8_e5m2"):
+        return a.astype(np.float32)
+    return a
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        flat[key] = leaf
+    return flat
+
+
+def save_pytree(tree, path: str):
+    """Atomic single-file save of a pytree of arrays."""
+    tmp = path + ".tmp"
+    flat = {k: _savable(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    treedef = jax.tree_util.tree_structure(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, __treedef__=np.frombuffer(
+            str(treedef).encode(), dtype=np.uint8), **flat)
+    os.replace(tmp, path)
+
+
+def load_pytree(template, path: str):
+    """Load into the structure of ``template`` (shapes must match)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files if k != "__treedef__"}
+    tmpl_flat = _flatten(template)
+    missing = set(tmpl_flat) - set(flat)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in kp)
+            for kp, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+    new_leaves = [flat[k].astype(np.asarray(l).dtype) if hasattr(l, "dtype")
+                  else flat[k] for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- discovery ----
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                full = os.path.join(self.dir, name)
+                if os.path.exists(os.path.join(full, "COMMIT")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ---- save ----
+    def _write(self, flat_np: Dict[str, np.ndarray], step: int,
+               meta: Dict[str, Any]):
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        try:
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **flat_np)
+            json.dump(meta, open(os.path.join(tmp, "meta.json"), "w"))
+            open(os.path.join(tmp, "COMMIT"), "w").write(str(time.time()))
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+        except BaseException as e:          # surfaced on next wait()/save()
+            self._error = e
+
+    def save(self, tree, step: int, blocking: bool = True,
+             meta: Optional[Dict[str, Any]] = None):
+        """Snapshot to host, then serialize (optionally on a worker thread)."""
+        self.wait()
+        flat_np = {k: _savable(jax.device_get(v))
+                   for k, v in _flatten(tree).items()}
+        meta = dict(meta or {}, step=step, time=time.time())
+        if blocking:
+            self._write(flat_np, step, meta)
+            self.check()
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(flat_np, step, meta), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.check()
+
+    def check(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint failed: {err!r}") from err
+
+    # ---- restore ----
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        keys = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in kp)
+                for kp, _ in jax.tree_util.tree_flatten_with_path(template)[0]]
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        new = []
+        for k, l in zip(keys, leaves):
+            arr = flat[k]
+            if hasattr(l, "dtype"):
+                arr = arr.astype(l.dtype)
+            new.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, new)
+        if shardings is not None:
+            tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                                shardings)
+        meta = json.load(open(os.path.join(path, "meta.json")))
+        return tree, meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

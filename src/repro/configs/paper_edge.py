@@ -1,0 +1,26 @@
+"""paper-edge — the paper's own deployment point: a small edge LM running
+with the P(8,2) transprecision policy ("Posit P(8,2) is exclusively used
+for vector operations, as this configuration is most used for DNNs
+deployed on edge devices", §IV-D).
+
+Used by the examples and the end-to-end driver; not part of the 40
+assigned dry-run cells.
+"""
+from ..models.lm import ModelCfg
+
+
+def full() -> ModelCfg:
+    # ~100M params: the end-to-end training deliverable size
+    return ModelCfg(
+        name="paper-edge-100m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        d_ff=2048, vocab=32000, mlp="swiglu",
+    )
+
+
+def smoke() -> ModelCfg:
+    return ModelCfg(
+        name="paper-edge-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=256, mlp="swiglu",
+    )

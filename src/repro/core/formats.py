@@ -1,0 +1,151 @@
+"""Number-format algebra for transprecision computing.
+
+The paper's TALU supports Posit / FP / INT at multiple bitwidths with runtime
+reconfiguration.  This module is the single source of truth for format
+descriptors used across the framework: the quantizer, the TC policy engine,
+the Pallas kernels, and the TALU cycle simulator all key off these objects.
+
+Formats are immutable, hashable dataclasses so they can live inside jit-cache
+keys and TC policies (pytrees of static metadata).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    """Base class for all number formats."""
+
+    name: str
+    bits: int
+
+    @property
+    def bytes(self) -> float:
+        return self.bits / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PositFormat(Format):
+    """Posit P(n, es) per Gustafson 2017 / posit standard conventions.
+
+    ``bias`` is a power-of-two scale applied to the *total* exponent when a
+    tensor's values cluster away from 1.0 (beyond-paper extension, see
+    DESIGN.md §7.4).  bias=0 is the paper-faithful format.
+    """
+
+    es: int = 2
+    bias: int = 0
+
+    def __post_init__(self):
+        if not (2 <= self.bits <= 32):
+            raise ValueError(f"posit bits must be in [2,32], got {self.bits}")
+        if not (0 <= self.es <= 3):
+            raise ValueError(f"posit es must be in [0,3], got {self.es}")
+
+    @property
+    def useed(self) -> int:
+        return 1 << (1 << self.es)
+
+    @property
+    def max_scale(self) -> int:
+        """Max total binary exponent t (maxpos = 2**max_scale)."""
+        return (1 << self.es) * (self.bits - 2)
+
+    @property
+    def storage_dtype(self):
+        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[
+            8 * max(1, (self.bits + 7) // 8)
+        ]
+
+    @property
+    def np_storage_dtype(self):
+        return {8: np.uint8, 16: np.uint16, 32: np.uint32}[
+            8 * max(1, (self.bits + 7) // 8)
+        ]
+
+
+@dataclasses.dataclass(frozen=True)
+class IntFormat(Format):
+    """Signed integer with an implicit per-tensor/per-channel scale."""
+
+    symmetric: bool = True
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) + (1 if self.symmetric else 0)
+
+    @property
+    def storage_dtype(self):
+        return jnp.int8 if self.bits <= 8 else (jnp.int16 if self.bits <= 16 else jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat(Format):
+    """IEEE-style float; maps to a native jnp dtype where one exists."""
+
+    exp_bits: int = 8
+    man_bits: int = 23
+
+    @property
+    def jnp_dtype(self):
+        key = (self.bits, self.exp_bits, self.man_bits)
+        table = {
+            (32, 8, 23): jnp.float32,
+            (16, 5, 10): jnp.float16,
+            (16, 8, 7): jnp.bfloat16,
+            (8, 4, 3): jnp.float8_e4m3fn,
+            (8, 5, 2): jnp.float8_e5m2,
+        }
+        if key not in table:
+            raise ValueError(f"no native dtype for {self}")
+        return table[key]
+
+
+# ---------------------------------------------------------------------------
+# Registry (the formats TALU supports, plus native TPU compute formats).
+# ---------------------------------------------------------------------------
+
+POSIT8_0 = PositFormat("posit8_0", 8, es=0)
+POSIT8_1 = PositFormat("posit8_1", 8, es=1)
+POSIT8_2 = PositFormat("posit8_2", 8, es=2)   # the paper's DNN format
+POSIT16_0 = PositFormat("posit16_0", 16, es=0)
+POSIT16_1 = PositFormat("posit16_1", 16, es=1)
+POSIT16_2 = PositFormat("posit16_2", 16, es=2)
+POSIT32_2 = PositFormat("posit32_2", 32, es=2)
+
+INT4 = IntFormat("int4", 4)
+INT8 = IntFormat("int8", 8)
+INT16 = IntFormat("int16", 16)
+INT32 = IntFormat("int32", 32)
+
+FP8_E4M3 = FloatFormat("fp8_e4m3", 8, exp_bits=4, man_bits=3)
+FP8_E5M2 = FloatFormat("fp8_e5m2", 8, exp_bits=5, man_bits=2)
+FP16 = FloatFormat("fp16", 16, exp_bits=5, man_bits=10)
+BF16 = FloatFormat("bf16", 16, exp_bits=8, man_bits=7)
+FP32 = FloatFormat("fp32", 32, exp_bits=8, man_bits=23)
+
+REGISTRY = {
+    f.name: f
+    for f in [
+        POSIT8_0, POSIT8_1, POSIT8_2, POSIT16_0, POSIT16_1, POSIT16_2,
+        POSIT32_2, INT4, INT8, INT16, INT32, FP8_E4M3, FP8_E5M2, FP16,
+        BF16, FP32,
+    ]
+}
+
+
+def get(name: str) -> Format:
+    if isinstance(name, Format):
+        return name
+    if name not in REGISTRY:
+        raise KeyError(f"unknown format {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

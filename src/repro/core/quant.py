@@ -1,0 +1,145 @@
+"""Quantize/dequantize across the TALU format family + QuantizedTensor.
+
+This is the bridge between the paper's transprecision formats and JAX models:
+
+* ``QuantizedTensor`` — a pytree carrying packed codes + an optional runtime
+  scale + the (static) format descriptor.  Posit tensors may carry a
+  power-of-two scale ("exponent bias", DESIGN.md §7.4) so tapered precision
+  is centred on the tensor's magnitude; int tensors carry an affine scale.
+* ``quantize`` / ``dequantize`` — storage-format conversion (the TPU
+  adaptation of TALU's decode-on-read / encode-on-write datapath).
+* ``fake_quant`` — straight-through-estimator quantization for QAT-style
+  transprecision training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import posit
+from .formats import FloatFormat, Format, IntFormat, PositFormat, get
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed low-precision tensor: ``value ~= decode(data) * scale``."""
+
+    data: jax.Array
+    scale: Optional[jax.Array]  # None, scalar, or broadcastable per-channel
+    fmt: Format                 # static
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def tree_flatten(self):
+        if self.scale is None:
+            return (self.data,), (self.fmt, False)
+        return (self.data, self.scale), (self.fmt, True)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, has_scale = aux
+        if has_scale:
+            return cls(children[0], children[1], fmt)
+        return cls(children[0], None, fmt)
+
+    def dequantize(self, dtype=jnp.float32):
+        return dequantize(self, dtype)
+
+    @property
+    def nbytes_packed(self) -> int:
+        n = int(np.prod(self.shape)) * self.fmt.bits / 8
+        if self.scale is not None:
+            n += int(np.prod(jnp.shape(self.scale))) * 4
+        return int(n)
+
+
+def _pow2_scale(x, axis):
+    """Power-of-two scale centring |x| median-ish (abs-mean) near 1.0."""
+    absx = jnp.abs(x)
+    mean = jnp.mean(absx, axis=axis, keepdims=axis is not None, where=absx > 0)
+    mean = jnp.maximum(mean, 1e-30)
+    return jnp.exp2(jnp.round(jnp.log2(mean)))
+
+
+def quantize(x, fmt, axis=None, scaled: bool = True) -> QuantizedTensor:
+    """Quantize a float tensor into packed storage codes.
+
+    posit: optional power-of-two runtime scale (exact to apply/remove).
+    int:   symmetric per-tensor (axis=None) or per-channel absmax scale.
+    float: native dtype cast (bf16/fp16/fp8 via XLA RNE).
+    """
+    fmt = get(fmt)
+    x = jnp.asarray(x, jnp.float32)
+    if isinstance(fmt, PositFormat):
+        if scaled:
+            s = _pow2_scale(x, axis)
+            codes = posit.encode_f32(x / s, fmt)
+            return QuantizedTensor(codes, s.astype(jnp.float32), fmt)
+        return QuantizedTensor(posit.encode_f32(x, fmt), None, fmt)
+    if isinstance(fmt, IntFormat):
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+        s = jnp.maximum(amax, 1e-30) / fmt.qmax
+        q = jnp.clip(jnp.round(x / s), fmt.qmin, fmt.qmax)
+        return QuantizedTensor(q.astype(fmt.storage_dtype), s.astype(jnp.float32), fmt)
+    if isinstance(fmt, FloatFormat):
+        return QuantizedTensor(x.astype(fmt.jnp_dtype), None, fmt)
+    raise TypeError(fmt)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32):
+    fmt = qt.fmt
+    if isinstance(fmt, PositFormat):
+        v = posit.decode_to_f32(qt.data, fmt)
+        v = jnp.nan_to_num(v)  # NaR -> 0 on the ML path
+    elif isinstance(fmt, IntFormat):
+        v = qt.data.astype(jnp.float32)
+    else:
+        v = qt.data.astype(jnp.float32)
+    if qt.scale is not None:
+        v = v * qt.scale
+    return v.astype(dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x, fmt_name: str, axis=None):
+    """Straight-through quantization: forward rounds through ``fmt``,
+    backward passes gradients unchanged (STE)."""
+    qt = quantize(x, get(fmt_name), axis=axis)
+    return dequantize(qt, jnp.result_type(x))
+
+
+def _fq_fwd(x, fmt_name, axis):
+    return fake_quant(x, fmt_name, axis), None
+
+
+def _fq_bwd(fmt_name, axis, res, g):
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def maybe_dequant(w, dtype=jnp.bfloat16):
+    """Pass-through for plain arrays; decode for packed QuantizedTensors.
+    Used at weight-consumption sites that bypass the TC policy hook."""
+    if isinstance(w, QuantizedTensor):
+        return dequantize(w, dtype)
+    return w
+
+
+def quantization_mse(x, fmt, axis=None) -> jax.Array:
+    """Mean squared quantization error of storing ``x`` in ``fmt``."""
+    qt = quantize(x, get(fmt), axis=axis)
+    return jnp.mean((dequantize(qt) - jnp.asarray(x, jnp.float32)) ** 2)

@@ -1,0 +1,217 @@
+"""Transprecision-computing (TC) policy engine.
+
+The paper's TALU reconfigures at runtime between Posit/FP/INT and bitwidths,
+"at the node level or at the layer level according to the application
+requirements" (§I).  On the TPU framework this becomes a *policy object*:
+
+* role-level defaults  — what format each tensor role uses
+  (attention weights, MLP weights, embeddings, KV cache, gradient wire
+  format, activations),
+* layer-level overrides — per-layer-index format maps (layer granularity),
+* node-level overrides  — per-named-op maps (node granularity).
+
+Policies are static, hashable metadata: switching policy between steps picks
+a different jit specialization, which is the software analogue of flipping
+``posit_en``/bitwidth control lines — no overprovisioned datapath, no
+recompilation of unrelated variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .formats import get
+
+ROLES = (
+    "attn_weights", "mlp_weights", "embed_weights", "activations",
+    "kv_cache", "grad_wire", "ssm_state",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TCPolicy:
+    """Transprecision policy. ``None`` for a role means full precision."""
+
+    name: str = "bf16"
+    attn_weights: Optional[str] = None
+    mlp_weights: Optional[str] = None
+    embed_weights: Optional[str] = None
+    activations: Optional[str] = None
+    kv_cache: Optional[str] = None
+    grad_wire: Optional[str] = None
+    ssm_state: Optional[str] = None
+    # layer granularity: ((layer_idx, role, fmt), ...) — hashable
+    layer_overrides: Tuple[Tuple[int, str, str], ...] = ()
+    # node granularity: ((op_name, fmt), ...)
+    node_overrides: Tuple[Tuple[str, str], ...] = ()
+    # serving: store the KV cache as packed posit codes (decode-on-read)
+    packed_kv: bool = False
+
+    def fmt_for(self, role: str, layer: Optional[int] = None,
+                node: Optional[str] = None) -> Optional[str]:
+        if node is not None:
+            for op_name, f in self.node_overrides:
+                if op_name == node:
+                    return f
+        if layer is not None:
+            for li, r, f in self.layer_overrides:
+                if li == layer and r == role:
+                    return f
+        return getattr(self, role)
+
+    def quantize_weight(self, w, role: str, layer=None, node=None):
+        """Weight hook on every matmul.  Two modes:
+
+        * packed serving — ``w`` is already a QuantizedTensor (posit codes
+          in HBM): decode-on-load, the paper's TALU datapath.  HBM traffic
+          for the weight is ``bits/16`` of the bf16 baseline.
+        * QAT training — fake-quant with STE so gradients flow.
+        """
+        if isinstance(w, quant.QuantizedTensor):
+            return w.dequantize(jnp.bfloat16)
+        f = self.fmt_for(role, layer, node)
+        if f is None:
+            return w
+        # per-output-channel scaling on the last axis
+        return quant.fake_quant(w, f, axis=tuple(range(w.ndim - 1)))
+
+    def storage_quantize(self, w, role: str, layer=None):
+        """Real packed storage (serving / memory-bound path)."""
+        f = self.fmt_for(role, layer)
+        if f is None:
+            return w
+        return quant.quantize(w, get(f), axis=tuple(range(w.ndim - 1)))
+
+    def bits_for(self, role: str) -> int:
+        f = getattr(self, role)
+        return get(f).bits if f else 16
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+# Full precision (baseline; bf16 compute, fp32 master/optimizer)
+BF16 = TCPolicy(name="bf16")
+
+# The paper's edge configuration: "Posit P(8,2) is exclusively used for
+# vector operations, as this configuration is most used for DNNs deployed on
+# edge devices" (§IV-D).
+PAPER_EDGE = TCPolicy(
+    name="paper_edge_p8",
+    attn_weights="posit8_2",
+    mlp_weights="posit8_2",
+    embed_weights="posit16_2",
+    kv_cache="posit8_2",
+)
+
+# Mixed transprecision: wider formats where sensitivity is high.
+MIXED_TC = TCPolicy(
+    name="mixed_tc",
+    attn_weights="posit8_2",
+    mlp_weights="posit8_2",
+    embed_weights="posit16_2",
+    kv_cache="posit16_2",
+    grad_wire="posit16_2",
+)
+
+# INT8 weight-only (the TALU INT mode; standard edge baseline)
+INT8_W = TCPolicy(name="int8_w", attn_weights="int8", mlp_weights="int8",
+                  embed_weights="int8")
+
+# FP8 weight-only (the TALU FP mode)
+FP8_W = TCPolicy(name="fp8_w", attn_weights="fp8_e4m3", mlp_weights="fp8_e4m3",
+                 embed_weights="fp8_e4m3")
+
+# Packed posit serving: weights AND KV cache live in HBM as posit8 codes,
+# decoded on load (the paper's decode-on-read datapath at datacenter scale)
+SERVE_P8 = TCPolicy(name="serve_posit8",
+                    attn_weights="posit8_2", mlp_weights="posit8_2",
+                    kv_cache="posit8_2", packed_kv=True)
+SERVE_P16 = TCPolicy(name="serve_posit16",
+                     attn_weights="posit16_2", mlp_weights="posit16_2",
+                     kv_cache="posit16_2", packed_kv=True)
+
+PRESETS = {p.name: p for p in [BF16, PAPER_EDGE, MIXED_TC, INT8_W, FP8_W,
+                               SERVE_P8, SERVE_P16]}
+
+
+# ---------------------------------------------------------------------------
+# Packed-parameter conversion (serving)
+# ---------------------------------------------------------------------------
+
+_ROLE_BY_NAME = {
+    "wq": "attn_weights", "wk": "attn_weights", "wv": "attn_weights",
+    "wo": "attn_weights", "wq_x": "attn_weights", "wk_x": "attn_weights",
+    "wv_x": "attn_weights", "wo_x": "attn_weights",
+    "wi": "mlp_weights", "wo_mlp": "mlp_weights",
+    "wx": "mlp_weights", "wy": "mlp_weights", "w_out": "mlp_weights",
+    "w_a": "mlp_weights", "w_x": "mlp_weights",
+    "in_proj": "mlp_weights", "out_proj": "mlp_weights",
+}
+
+
+def pack_params(params, policy: TCPolicy, abstract: bool = False):
+    """Convert matrix weight leaves to packed posit QuantizedTensors per
+    the policy's role formats (embeddings/norms/vectors stay unpacked —
+    the embedding gather wants code-row indexing, left as future work).
+
+    ``abstract=True`` builds the ShapeDtypeStruct skeleton for the dry-run.
+    """
+    from .formats import PositFormat
+
+    def pack(kp, w):
+        name = None
+        for k in reversed(kp):
+            key = str(getattr(k, "key", getattr(k, "idx", k)))
+            if not key.isdigit():
+                name = key
+                break
+        role = _ROLE_BY_NAME.get(name)
+        if role is None or w.ndim < 2:
+            return w
+        f = policy.fmt_for(role)
+        if f is None or not isinstance(get(f), PositFormat):
+            return w
+        fmt = get(f)
+        # stacked per-period block leaves keep their leading stack axis in
+        # the scale so lax.scan can slice params and scales together.
+        # Channel choice follows the sharding rules (launch/mesh.py): the
+        # per-channel scale must live on a dim whose sharding matches the
+        # code tensor's spec under prefix broadcast — last dim for
+        # input-major weights, second-to-last for output projections.
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        stacked = keys[0] == "blocks" and w.ndim >= 3
+        out_in = (name in ("wo", "wo_mlp", "w_out", "out_proj", "wo_x")
+                  and "moe" not in keys)
+        ch = w.ndim - 2 if out_in else w.ndim - 1
+        keep = {ch} | ({0} if stacked else set())
+        axis = tuple(i for i in range(w.ndim) if i not in keep)
+        if abstract:
+            import jax
+            scale_shape = tuple(w.shape[i] if i in keep else 1
+                                for i in range(w.ndim))
+            return quant.QuantizedTensor(
+                jax.ShapeDtypeStruct(w.shape, fmt.storage_dtype),
+                jax.ShapeDtypeStruct(scale_shape, jnp.float32), fmt)
+        return quant.quantize(w, fmt, axis=axis)
+
+    import jax
+    return jax.tree_util.tree_map_with_path(pack, params)
+
+
+def get_policy(name) -> TCPolicy:
+    if isinstance(name, TCPolicy):
+        return name
+    if name not in PRESETS:
+        raise KeyError(f"unknown TC policy {name!r}; known: {sorted(PRESETS)}")
+    return PRESETS[name]
+
+
+def hbm_bytes_per_param(policy: TCPolicy, role: str = "mlp_weights") -> float:
+    f = getattr(policy, role)
+    return (get(f).bits / 8.0) if f else 2.0  # bf16 default

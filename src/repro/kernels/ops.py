@@ -1,0 +1,41 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+These wrap the raw ``pallas_call`` kernels with QuantizedTensor plumbing so
+model code can stay format-agnostic.  On CPU (this container) the kernels
+run in interpret mode; on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.formats import PositFormat, get
+from ..core.quant import QuantizedTensor
+from .posit_decode import posit_decode
+from .posit_encode import posit_encode
+from .posit_matmul import posit_matmul
+
+__all__ = ["posit_decode", "posit_encode", "posit_matmul", "qt_matmul",
+           "qt_decode", "quantize_2d"]
+
+
+def qt_matmul(x, w: QuantizedTensor, **kw):
+    """x @ dequant(w) with in-VMEM decode (w stored as packed posit)."""
+    assert isinstance(w.fmt, PositFormat), "qt_matmul expects posit storage"
+    return posit_matmul(x, w.data, w.fmt, scale=w.scale, **kw)
+
+
+def qt_decode(w: QuantizedTensor, out_dtype=jnp.float32, **kw):
+    assert isinstance(w.fmt, PositFormat)
+    out = posit_decode(w.data, w.fmt, out_dtype=out_dtype, **kw)
+    if w.scale is not None:
+        out = out * w.scale
+    return out
+
+
+def quantize_2d(x, fmt_name: str, **kw) -> QuantizedTensor:
+    """Kernel-path 2-D quantize (unscaled posit storage)."""
+    fmt = get(fmt_name)
+    assert isinstance(fmt, PositFormat)
+    return QuantizedTensor(posit_encode(x, fmt, **kw), None, fmt)

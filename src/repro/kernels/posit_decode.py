@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: posit -> float decode (Algorithm 1 on the VPU).
+
+The kernel body is the paper's decode, vectorized: the regime is found with
+n-1 *parallel threshold comparisons* (the thermometer/Q-function form —
+deliberately not clz, so every op is a plain VPU compare/add and the kernel
+mirrors the TALU datapath), then exponent/fraction are exposed with shifts
+and the IEEE-754 bit pattern is assembled integer-only (no transcendentals).
+
+Tiles are (block_m, block_n) in VMEM; codes are uint8/uint16, output f32 or
+bf16.  Arithmetic intensity is trivial (this kernel exists to *fuse* into
+consumers — see posit_matmul which inlines `decode_tile`), but a standalone
+decode is useful for cache/state dequantization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.formats import PositFormat
+from ..core.posit import mask_u32, negate_code_u32, shl_u32, shr_u32
+
+U32 = jnp.uint32
+
+
+def decode_tile(codes, fmt: PositFormat, out_dtype=jnp.float32):
+    """Decode a tile of posit codes to float. Pure jnp; Pallas-safe ops only
+    (compares, shifts, adds — no clz, no gather). Bit-exact for n<=16."""
+    n, es = fmt.bits, fmt.es
+    u = codes.astype(U32) & mask_u32(n)
+    is_zero = u == 0
+    is_nar = u == (U32(1) << U32(n - 1))
+    s = shr_u32(u, n - 1) & U32(1)
+    mag = jnp.where(s == 1, negate_code_u32(u, n), u)
+    body = mag & mask_u32(n - 1)
+    lead = shr_u32(body, n - 2) & U32(1)
+    t_val = jnp.where(lead == 1, body, (~body) & mask_u32(n - 1))
+    # --- Algorithm 1: parallel threshold comparisons (unrolled, VPU) ---
+    r = jnp.zeros_like(u)
+    for i in range(n - 1):
+        thr = U32((1 << (n - 1)) - (1 << i))  # 2^{n-1}-1-(2^i-1)
+        r = r + (t_val >= thr).astype(U32)
+    k = jnp.where(lead == 1, r.astype(jnp.int32) - 1, -r.astype(jnp.int32))
+    rem_i = jnp.maximum(jnp.int32(n - 1) - r.astype(jnp.int32) - 1, 0)
+    rem = rem_i.astype(U32)
+    rest = body & mask_u32(rem)
+    e_have = jnp.minimum(rem, U32(es))
+    e_field = shl_u32(shr_u32(rest, rem - e_have), U32(es) - e_have)
+    f_len = jnp.maximum(rem_i - es, 0).astype(U32)
+    f_field = rest & mask_u32(f_len)
+    t = (k << es) + e_field.astype(jnp.int32) + fmt.bias
+    # --- IEEE-754 assembly (f_len <= 13 <= 23: exact) ---
+    man = shl_u32(f_field, U32(23) - f_len)
+    bits = shl_u32(s, 31) | shl_u32((t + 127).astype(U32), 23) | man
+    val = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    val = jnp.where(is_zero, 0.0, val)
+    val = jnp.where(is_nar, jnp.nan, val)
+    return val.astype(out_dtype)
+
+
+def _decode_kernel(c_ref, o_ref, *, fmt, out_dtype):
+    o_ref[...] = decode_tile(c_ref[...], fmt, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "out_dtype", "interpret"))
+def posit_decode(codes, fmt: PositFormat, *, block=(256, 256),
+                 out_dtype=jnp.float32, interpret=None):
+    """Blocked posit decode. codes: (M, N) uint8/uint16 -> (M, N) float."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, n = codes.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    pm, pn = -m % bm, -n % bn
+    padded = jnp.pad(codes, ((0, pm), (0, pn)))
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, fmt=fmt, out_dtype=out_dtype),
+        grid=(padded.shape[0] // bm, padded.shape[1] // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, out_dtype),
+        interpret=interpret,
+    )(padded)
+    return out[:m, :n]

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: float -> posit encode (quantize-on-store).
+
+Bit-exact RNE assembly (guard/sticky on the regime/exponent/fraction
+concatenation), saturating to maxpos/minpos.  Used for KV-cache / gradient
+wire quantization where the store side is the bandwidth bottleneck.
+
+float32 subnormal inputs (|x| < 2^-126) are flushed to zero inside the
+kernel: every assigned posit format maps them to minpos/zero anyway and this
+keeps the body free of clz (VPU compare/shift/add only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.formats import PositFormat
+from ..core.posit import mask_u32, negate_code_u32, shl_u32, shr_u32
+
+U32 = jnp.uint32
+
+
+def encode_tile(x, fmt: PositFormat):
+    """Encode a float32 tile to posit codes. Pallas-safe; bit-exact RNE for
+    normal floats (subnormals flushed — see module docstring)."""
+    n, es = fmt.bits, fmt.es
+    xf = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.int32).astype(U32)
+    s = shr_u32(bits, 31)
+    exp_raw = (shr_u32(bits, 23) & mask_u32(8)).astype(jnp.int32)
+    frac = bits & mask_u32(23)
+    is_zero = (bits & mask_u32(31)) == 0
+    is_zero = is_zero | (exp_raw == 0)  # flush subnormals
+    is_nar = exp_raw == 255
+    t = exp_raw - 127 - fmt.bias
+    fw = 23
+    # --- regime/exponent split ---
+    k = t >> es
+    e_field = (t - (k << es)).astype(U32)
+    sat_hi = k >= n - 2
+    sat_lo = k <= -(n - 1)
+    k_c = jnp.clip(k, -(n - 2), n - 3)
+    pos = k_c >= 0
+    w0 = jnp.where(pos, k_c + 2, 1 - k_c)
+    reg = jnp.where(pos, shl_u32(mask_u32((k_c + 1).astype(U32)), 1), U32(1))
+    avail = jnp.int32(n - 1) - w0
+    ef_shift = avail + 1 - es
+    # --- case ef_shift >= 0 ---
+    efp = jnp.maximum(ef_shift, 0).astype(U32)
+    take = jnp.minimum(efp, U32(fw))
+    fbits = shl_u32(shr_u32(frac, U32(fw) - take), efp - take)
+    st_a = (frac & mask_u32(U32(fw) - take)) != 0
+    efg_a = shl_u32(e_field, efp) | fbits
+    # --- case ef_shift < 0 ---
+    cut = jnp.maximum(-ef_shift, 0).astype(U32)
+    efg_b = shr_u32(e_field, cut)
+    st_b = ((e_field & mask_u32(cut)) != 0) | (frac != 0)
+    neg_case = ef_shift < 0
+    efg = jnp.where(neg_case, efg_b, efg_a)
+    st = jnp.where(neg_case, st_b, st_a)
+    guard = efg & U32(1)
+    kept = shr_u32(efg, 1)
+    body = shl_u32(reg, avail.astype(U32)) | kept
+    body = body + (guard & (st.astype(U32) | (body & U32(1))))
+    body = jnp.where(sat_hi, mask_u32(n - 1), body)
+    body = jnp.where(sat_lo, U32(1), body)
+    body = jnp.clip(body, U32(1), mask_u32(n - 1))
+    code = jnp.where(s == 1, negate_code_u32(body, n), body)
+    code = jnp.where(is_zero, U32(0), code)
+    code = jnp.where(is_nar, U32(1) << U32(n - 1), code)
+    return code.astype(fmt.storage_dtype)
+
+
+def _encode_kernel(x_ref, o_ref, *, fmt):
+    o_ref[...] = encode_tile(x_ref[...], fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def posit_encode(x, fmt: PositFormat, *, block=(256, 256), interpret=None):
+    """Blocked posit encode. x: (M, N) float -> (M, N) posit codes."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    pm, pn = -m % bm, -n % bn
+    padded = jnp.pad(x, ((0, pm), (0, pn)))
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, fmt=fmt),
+        grid=(padded.shape[0] // bm, padded.shape[1] // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(padded.shape, fmt.storage_dtype),
+        interpret=interpret,
+    )(padded)
+    return out[:m, :n]

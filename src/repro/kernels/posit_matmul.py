@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: activations x posit-packed weights matmul.
+
+The flagship TPU adaptation of the paper: TALU performs posit arithmetic in
+the ALU; the TPU-native equivalent streams 8/16-bit posit *storage* through
+HBM and decodes tiles in VMEM right before the MXU consumes them:
+
+    HBM:  W packed posit8 (1 byte/param)           [bandwidth term /2..4]
+    VMEM: decode_tile (VPU compares/shifts, Alg.1) [hidden under MXU time]
+    MXU:  f32-accumulated dot per (bm, bk)x(bk, bn) block
+
+Grid is (M/bm, N/bn, K/bk) with K innermost; the f32 accumulator lives in
+the output block across K steps.  Per-output-channel (or scalar) scales fold
+in after the last K step, so posit exponent-bias/int scaling costs one VPU
+multiply per output tile.
+
+Block defaults (512, 512, 256) target v5e VMEM: x tile 512x256xbf16 = 256KiB,
+w tile 256x512x1B = 128KiB, acc 512x512xf32 = 1MiB — ~1.4MiB working set, and
+(512,512,256) keeps every MXU dim a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.formats import PositFormat
+from .posit_decode import decode_tile
+
+
+def _matmul_kernel(x_ref, w_ref, s_ref, o_ref, *, fmt, nk, compute_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = decode_tile(w_ref[...], fmt, compute_dtype)
+    x = x_ref[...].astype(compute_dtype)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _apply_scale():
+        o_ref[...] *= s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "blocks", "compute_dtype",
+                                             "interpret"))
+def posit_matmul(x, w_codes, fmt: PositFormat, scale=None, *,
+                 blocks=(512, 512, 256), compute_dtype=jnp.float32,
+                 interpret=None):
+    """x: (M, K) float; w_codes: (K, N) posit codes; scale: None | scalar |
+    (N,) per-output-channel. Returns (M, N) float32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, kdim = x.shape
+    k2, n = w_codes.shape
+    assert kdim == k2, (x.shape, w_codes.shape)
+    bm, bn, bk = (min(blocks[0], m), min(blocks[1], n), min(blocks[2], kdim))
+    pm, pn, pk = -m % bm, -n % bn, -kdim % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    wp = jnp.pad(w_codes, ((0, pk), (0, pn)))
+    if scale is None:
+        srow = jnp.ones((1, n), jnp.float32)
+    else:
+        srow = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
+    sp = jnp.pad(srow, ((0, 0), (0, pn)))
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, fmt=fmt, nk=gk,
+                          compute_dtype=compute_dtype),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, sp)
+    return out[:m, :n]

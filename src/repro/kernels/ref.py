@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import posit
+from ..core.formats import PositFormat
+
+
+def posit_decode_ref(codes, fmt: PositFormat, out_dtype=jnp.float32):
+    """Oracle for kernels.posit_decode: bit-exact posit -> float."""
+    return posit.decode_to_f32(codes, fmt).astype(out_dtype)
+
+
+def posit_encode_ref(x, fmt: PositFormat):
+    """Oracle for kernels.posit_encode: bit-exact RNE float -> posit."""
+    return posit.encode_f32(x, fmt)
+
+
+def posit_matmul_ref(x, w_codes, fmt: PositFormat, scale=None,
+                     out_dtype=jnp.float32):
+    """Oracle for kernels.posit_matmul: decode weights, f32 matmul, scale."""
+    w = posit.decode_to_f32(w_codes, fmt)
+    out = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    if scale is not None:
+        out = out * scale
+    return out.astype(out_dtype)

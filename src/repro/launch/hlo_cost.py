@@ -1,0 +1,422 @@
+"""Loop-aware cost analysis of a compiled (post-SPMD, per-device) HLO module.
+
+``compiled.cost_analysis()`` on the CPU backend counts a ``while`` body
+ONCE, regardless of trip count (verified: scan(n=4) and scan(n=8) report
+identical FLOPs).  Our production programs are scan-over-layers + flash
+attention loops, so naive cost_analysis under-reports by ~n_layers x
+n_blocks.  This module re-derives FLOPs / HBM bytes / collective bytes from
+``compiled.as_text()`` with call-graph multiplicity:
+
+  * ``while``       — body and condition costs x ``known_trip_count`` (from
+                      backend_config, emitted by XLA on every scan/fori).
+  * ``fusion``      — FLOPs of the fused computation counted once; HBM bytes
+                      taken at the call site (operands + result), matching
+                      the fusion-aware accounting of HloCostAnalysis: fused
+                      intermediates never touch HBM.
+  * ``call``/others — multiplicity 1.
+  * collectives     — result-shape bytes (for all-gather this is the
+                      gathered payload each device receives ~= wire bytes;
+                      for all-reduce/all-to-all/collective-permute result ==
+                      operand payload), times loop multiplicity.
+
+FLOP counting: ``dot`` = 2 * prod(result dims) * prod(contracting dims);
+``convolution`` = 2 * prod(result) * prod(kernel spatial+input-feature);
+elementwise/reduce ~= 1 FLOP per output (transcendentals ~= 1 — they are
+noise next to the dots at these shapes).
+
+This is the source for EXPERIMENTS.md §Roofline; tests cross-check it
+against ``cost_analysis()`` on loop-free programs (where both are exact)
+and against scan-vs-unrolled equivalence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5, "s8": 1,
+    "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that are pure data movement / bookkeeping: 0 FLOPs
+_ZERO_FLOP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "reshape",
+    "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "pad", "reverse", "gather",
+    "scatter", "iota", "convert", "reduce-precision", "after-all",
+    "partition-id", "replica-id", "rng", "rng-bit-generator", "infeed",
+    "outfeed", "optimization-barrier", "custom-call", "send", "recv",
+    "send-done", "recv-done", "domain", "select", "clamp", "sort",
+} | set(COLLECTIVES) | {c + s for c in COLLECTIVES for s in
+                        ("-start", "-done")}
+
+
+def _shape_dims(txt: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(txt: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(txt: str) -> float:
+    total = 0.0
+    for _, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str          # result type text (before op name)
+    op: str
+    args: str            # inside parens
+    attrs: str           # after parens
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+    def table(self) -> Dict[str, str]:
+        """instr name -> result type text (operands are printed untyped)."""
+        return {i.name: i.result for i in self.instrs}
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},\d]+)+)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4), m.group(5)))
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(rf"{key}=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(attrs: str) -> Optional[int]:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else None
+
+
+_ARG_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _arg_types(instr: Instr, table: Dict[str, str]) -> List[str]:
+    """Resolve operand names to their result-type text."""
+    out = []
+    for m in _ARG_NAME_RE.finditer(instr.args):
+        t = table.get(m.group(1))
+        if t is not None:
+            out.append(t)
+    # inline-typed operands (older dumps) appear directly in args
+    if not out and _SHAPE_RE.search(instr.args):
+        out = [instr.args]
+    return out
+
+
+def _dot_flops(instr: Instr, table: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    res = _shape_dims(instr.result)
+    if not res:
+        return 0.0
+    result_elems = 1
+    for d in res[0][1]:
+        result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    ops = _arg_types(instr, table)
+    if not m or not ops:
+        return 2.0 * result_elems            # fallback
+    lhs = _shape_dims(ops[0])
+    if not lhs:
+        return 2.0 * result_elems
+    lhs_dims = lhs[0][1]
+    contract = 1
+    for i in m.group(1).split(","):
+        if i != "":
+            contract *= lhs_dims[int(i)]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(instr: Instr, table: Dict[str, str]) -> float:
+    res = _shape_dims(instr.result)
+    ops = [_shape_dims(t) for t in _arg_types(instr, table)]
+    ops = [o for o in ops if o]
+    if not res or len(ops) < 2:
+        return 0.0
+    result_elems = 1
+    for d in res[0][1]:
+        result_elems *= d
+    kernel_elems = 1
+    for d in ops[1][0][1]:
+        kernel_elems *= d
+    # per output element: 2 * kernel_elems / output_features (approx)
+    out_feat = res[0][1][-1] if res[0][1] else 1
+    return 2.0 * result_elems * kernel_elems / max(out_feat, 1)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "bytes": 0.0}
+                                 for k in COLLECTIVES})
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVES:
+            self.coll[k]["count"] += mult * other.coll[k]["count"]
+            self.coll[k]["bytes"] += mult * other.coll[k]["bytes"]
+        for k, v in other.by_op.items():
+            self.by_op[k] = self.by_op.get(k, 0.0) + mult * v
+
+    def _op_bytes(self, op: str, b: float):
+        self.bytes += b
+        self.by_op[op] = self.by_op.get(op, 0.0) + b
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.coll.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def cost(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self._comp_cost(self.entry, top=True)
+
+    # ---- internals ----
+    _SLICED = ("slice", "dynamic-slice", "gather")
+
+    def _fusion_param_bytes(self, callee: str, arg_types: List[str]) -> float:
+        """Bytes a fusion actually reads from each operand: a parameter whose
+        only uses inside the fused computation are slice/dynamic-slice/gather
+        contributes the sliced bytes, not the whole array (this is how scan
+        bodies read one layer's weights from the stacked (L, ...) buffers —
+        charging the full stack per trip would overcount HBM traffic ~L x)."""
+        key = ("__fb__", callee)
+        comp = self.comps.get(callee)
+        if comp is None:
+            return sum(_bytes_of(t) for t in arg_types)
+        if key not in self._memo:
+            params: Dict[str, int] = {}
+            for ins in comp.instrs:
+                if ins.op == "parameter":
+                    try:
+                        params[ins.name] = int(ins.args.strip().strip("%"))
+                    except ValueError:
+                        pass
+            # per param: None = fully read; float = sliced bytes
+            access: Dict[int, Optional[float]] = {}
+            for pname, idx in params.items():
+                sliced = 0.0
+                full = False
+                used = False
+                for ins in comp.instrs:
+                    if ins.op == "parameter":
+                        continue
+                    names = [m.group(1) for m in
+                             _ARG_NAME_RE.finditer(ins.args)]
+                    if pname not in names:
+                        continue
+                    used = True
+                    if ins.op in self._SLICED:
+                        sliced += _bytes_of(ins.result)
+                    else:
+                        full = True
+                        break
+                access[idx] = None if (full or not used) else sliced
+            self._memo[key] = access          # type: ignore
+        access = self._memo[key]              # type: ignore
+        total = 0.0
+        for i, t in enumerate(arg_types):
+            a = access.get(i)
+            total += _bytes_of(t) if a is None else min(a, _bytes_of(t))
+        return total
+
+    def _comp_cost(self, name: str, top: bool) -> Cost:
+        key = (name, top)
+        if key in self._memo:
+            return self._memo[key]
+        c = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            self._memo[key] = c
+            return c
+        table = comp.table()
+        for ins in comp.instrs:
+            self._instr_cost(ins, c, top, table)
+        self._memo[key] = c
+        return c
+
+    def _instr_cost(self, ins: Instr, c: Cost, top: bool,
+                    table: Dict[str, str]):
+        op = ins.op
+        # --- control flow / calls ---
+        if op == "while":
+            body = _called(ins.attrs, "body")
+            cond = _called(ins.attrs, "condition")
+            trips = _trip_count(ins.attrs) or 1
+            if body:
+                c.add(self._comp_cost(body, top), trips)
+            if cond:
+                c.add(self._comp_cost(cond, top), trips + 1)
+            return
+        if op == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+            if m:
+                branches = [b.strip().lstrip("%") for b in
+                            m.group(1).split(",")]
+                costs = [self._comp_cost(b, top) for b in branches]
+                if costs:   # worst case branch
+                    c.add(max(costs, key=lambda x: x.flops))
+            return
+        arg_types = _arg_types(ins, table)
+        arg_bytes = sum(_bytes_of(t) for t in arg_types)
+        # sliced reads/writes only touch the slice, not the whole operand
+        if op in ("slice", "dynamic-slice", "gather"):
+            c._op_bytes(op, 2 * _bytes_of(ins.result))
+            return
+        if op == "dynamic-update-slice":
+            upd = _bytes_of(arg_types[1]) if len(arg_types) > 1 else \
+                _bytes_of(ins.result)
+            c._op_bytes(op, 2 * upd)
+            return
+        if op == "scatter":
+            upd = _bytes_of(arg_types[-1]) if arg_types else \
+                _bytes_of(ins.result)
+            c.flops += _elems_of(arg_types[-1]) if arg_types else 0.0
+            c._op_bytes(op, 2 * upd)
+            return
+        if op == "fusion":
+            callee = _called(ins.attrs, "calls")
+            fusion_bytes = _bytes_of(ins.result) + arg_bytes
+            if callee:
+                inner = self._comp_cost(callee, top=False)
+                c.flops += inner.flops
+                for k in COLLECTIVES:
+                    c.coll[k]["count"] += inner.coll[k]["count"]
+                    c.coll[k]["bytes"] += inner.coll[k]["bytes"]
+                fusion_bytes = (_bytes_of(ins.result)
+                                + self._fusion_param_bytes(callee, arg_types))
+            # HBM traffic at the fusion boundary, utilization-aware
+            c._op_bytes(op, fusion_bytes)
+            return
+        if op == "call":
+            callee = _called(ins.attrs, "to_apply")
+            if callee:
+                c.add(self._comp_cost(callee, top))
+            return
+
+        # --- collectives (incl. async -start forms) ---
+        for k in COLLECTIVES:
+            if op == k or op == k + "-start":
+                c.coll[k]["count"] += 1
+                # result bytes: for -start ops the result is a tuple
+                # (operand, result[, scratch]); take the non-operand part
+                rb = _bytes_of(ins.result)
+                if op.endswith("-start") and rb >= arg_bytes > 0:
+                    rb = rb - arg_bytes
+                c.coll[k]["bytes"] += rb
+                c._op_bytes(op, arg_bytes + rb)
+                return
+            if op == k + "-done":
+                return
+
+        # --- compute ---
+        if op == "dot":
+            c.flops += _dot_flops(ins, table)
+            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            return
+        if op == "convolution":
+            c.flops += _conv_flops(ins, table)
+            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            return
+        if op in ("reduce", "reduce-window", "map", "scatter",
+                  "select-and-scatter"):
+            args = _arg_types(ins, table)
+            c.flops += _elems_of(args[0]) if args else _elems_of(ins.result)
+            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            return
+        if op in _ZERO_FLOP:
+            if op not in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "iota", "after-all",
+                          "bitcast", "bitcast-convert"):
+                c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            return
+        # generic elementwise (add/multiply/exp/...)
+        c.flops += _elems_of(ins.result)
+        c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+
+
+def analyze(hlo_text: str) -> Dict[str, object]:
+    cost = HloCostModel(hlo_text).cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_bytes": cost.coll_bytes,
+        "collectives": {k: dict(v) for k, v in cost.coll.items()},
+    }

@@ -1,0 +1,207 @@
+"""Production mesh + sharding rules.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — CPU smoke tests see 1 device,
+the dry-run sets XLA_FLAGS itself before any jax import.
+
+Sharding is split into:
+  * logical-axis rules (installed via ``models.common.axis_rules``) that the
+    model's ``constrain`` calls resolve against, and
+  * param/opt/batch/cache PartitionSpec builders keyed off leaf names —
+    2-D sharding: matrix input dims -> "data" (FSDP), output dims ->
+    "model" (TP), experts -> "model" (EP), KV-cache sequence -> "model".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.lm import ModelCfg
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1-D data mesh (CPU tests, examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis rules (consumed by models.common.constrain)
+# ---------------------------------------------------------------------------
+
+def train_rules(mesh: Mesh, *, global_batch: int, seq_shard: bool = True,
+                heads_shard: bool = False) -> Dict[str, Any]:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    batch = batch_axes if global_batch % bsz == 0 else None
+    return {
+        "batch": batch,
+        "seq": "model" if seq_shard else None,   # sequence-parallel residual
+        "heads": "model" if heads_shard else None,
+        "ffn": "model",
+        "vocab": "model",
+        "expert": "model",
+        "kv_seq": "model",
+    }
+
+
+def serve_rules(mesh: Mesh, *, global_batch: int) -> Dict[str, Any]:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    batch = batch_axes if global_batch % bsz == 0 else None
+    return {
+        "batch": batch,
+        "seq": None,
+        "heads": None,
+        "ffn": "model",
+        "vocab": "model",
+        "expert": "model",
+        "kv_seq": "model",
+    }
+
+
+# ---------------------------------------------------------------------------
+# Param / optimizer / batch / cache PartitionSpecs
+# ---------------------------------------------------------------------------
+
+# weight-leaf name -> (spec for the trailing dims); leading stack axes get None
+_MAT_IN_OUT = {"wq", "wk", "wv", "wi", "wx", "wy", "in_proj", "w_a", "w_x",
+               "wq_x", "wk_x", "wv_x"}
+_MAT_OUT_IN = {"wo", "wo_mlp", "w_out", "out_proj", "wo_x"}
+
+
+def _leaf_spec(path: str, shape, fsdp, model) -> P:
+    """Trailing-dims partition for one param leaf (by its dict key name)."""
+    parts = path.split("/")
+    name = parts[-1]
+    nd = len(shape)
+    # packed QuantizedTensor leaves: codes shard like the weight itself,
+    # per-channel scales shard on their (last) channel dim
+    if name == "data" and len(parts) >= 2:
+        name = parts[-2]
+    elif name == "scale":
+        parent = parts[-2] if len(parts) >= 2 else ""
+        last = model if (parent in _MAT_IN_OUT or parent in _MAT_OUT_IN
+                         or parent in ("wi", "wo")) else None
+        if parent in _MAT_OUT_IN:   # output dim is the param's fsdp dim
+            last = fsdp
+        return P(*([None] * (nd - 1)), last)
+    if name == "embed":                       # (vocab, d)
+        return P(model, fsdp)
+    if name == "lm_head":                     # (d, vocab)
+        return P(fsdp, model)
+    if name == "router":                      # (d, E) — replicate E (tiny)
+        return P(*([None] * (nd - 2)), fsdp, None)
+    if name in ("wi", "wo") and nd >= 3 and "moe" in path:
+        # MoE expert weights (E, d, f) / (E, f, d): experts on model (EP)
+        lead = [None] * (nd - 3)
+        if name == "wi":
+            return P(*lead, model, fsdp, None)
+        return P(*lead, model, None, fsdp)
+    if name == "conv_w":                      # (K, ch): channels follow model
+        return P(*([None] * (nd - 1)), model)
+    if name in _MAT_IN_OUT and nd >= 2:
+        return P(*([None] * (nd - 2)), fsdp, model)
+    if name in _MAT_OUT_IN and nd >= 2:
+        return P(*([None] * (nd - 2)), model, fsdp)
+    # vectors/norms/scalars (ln, *_norm, A_log, D, dt_bias, Lambda, b_*)
+    return P(*([None] * nd))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(abstract_params, *, fsdp: Optional[str] = "data",
+                model: Optional[str] = "model"):
+    """PartitionSpec pytree matching ``init_params(..., abstract=True)``.
+
+    MoE expert weights live under a "moe" key so the EP rule can find them;
+    everything else dispatches on the leaf name.  ``fsdp=None`` replicates
+    the weight input dims (serving mode).
+
+    Packed QuantizedTensor weights emit ONE spec at the QT position (a
+    pytree *prefix*: jit broadcasts it over (data, scale); the scale's
+    broadcast dims are size-1 so the data spec is valid for both).
+    """
+    from ..core.quant import QuantizedTensor
+
+    def spec(kp, leaf):
+        shape = leaf.data.shape if isinstance(leaf, QuantizedTensor) \
+            else leaf.shape
+        return _leaf_spec(_path_str(kp), shape, fsdp, model)
+
+    return jax.tree_util.tree_map_with_path(
+        spec, abstract_params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def opt_specs(pspecs):
+    """Optimizer-state specs: every moment/master leaf shards like its param."""
+    return {"step": P(), "mu": pspecs, "nu": pspecs, "master": pspecs}
+
+
+def batch_specs(cfg: ModelCfg, rules: Dict[str, Any], keys=None):
+    b = rules.get("batch")
+    out = {"tokens": P(b, None), "labels": P(b, None),
+           "embeds": P(b, None, None), "frames": P(b, None, None)}
+    if keys is None:
+        keys = {"tokens", "labels"}
+        if cfg.family == "vlm":
+            keys = {"embeds", "labels"}
+        if cfg.family == "audio":
+            keys |= {"frames"}
+    return {k: out[k] for k in keys}
+
+
+def cache_specs(abstract_cache, cfg: ModelCfg, rules: Dict[str, Any]):
+    """Decode-cache specs: KV sequence on "model", batch on data axes."""
+    b = rules.get("batch")
+    kv = rules.get("kv_seq")
+    model = "model"
+
+    def spec(kp, leaf):
+        path = _path_str(kp)
+        name = path.split("/")[-1]
+        nd = len(leaf.shape)
+        stacked = path.startswith("blocks")   # leading period-stack axis
+        lead = (None,) if stacked else ()
+        if name == "pos":
+            return P()
+        if name == "memory":                  # (B, enc_seq, d)
+            return P(b, None, None)
+        if name in ("k", "v"):                # (B, W, nkv, hd)
+            return P(*lead, b, kv, None, None)
+        if name in ("xk", "xv"):              # (B, enc_seq, nkv, hd)
+            return P(*lead, b, None, None, None)
+        if name == "state":                   # (B, nh, hd, ds)
+            return P(*lead, b, model, None, None)
+        if name == "conv":                    # (B, K-1, ch)
+            return P(*lead, b, None, model)
+        if name == "h":                       # (B, width)
+            return P(*lead, b, model)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

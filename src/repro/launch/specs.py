@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` -> dict of ShapeDtypeStructs for train/prefill;
+``decode_specs`` additionally builds the abstract KV/state cache pre-sized to
+``seq_len`` (the assigned decode cells serve one new token against a cache
+of seq_len).  Modality frontends are stubbed per the assignment: vlm gets
+patch embeddings, audio gets precomputed mel-frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ShapeSpec
+from ..models.lm import ModelCfg
+from ..models.serve_model import init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelCfg, spec: ShapeSpec) -> Dict[str, Any]:
+    """Training / prefill inputs for one assigned (arch x shape) cell."""
+    b, s = spec.global_batch, spec.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        # patch/frame embeddings from the (stubbed) vision frontend
+        out["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        out["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if spec.kind == "train":
+        out["labels"] = sds((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelCfg, spec: ShapeSpec,
+                 policy=None) -> Tuple[Any, Any]:
+    """(abstract_cache, token_specs) for the single-token serve step."""
+    from ..core.transprecision import BF16
+    b, s = spec.global_batch, spec.seq_len
+    policy = policy or BF16
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s, policy=policy))
+    if cfg.family == "vlm":
+        tok = sds((b, 1, cfg.d_model), jnp.bfloat16)   # embeds path
+    else:
+        tok = sds((b, 1), jnp.int32)
+    return cache, tok

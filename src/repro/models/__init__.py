@@ -1,0 +1,3 @@
+from . import attention, common, lm, moe, rglru, serve_model, ssm
+from .lm import ModelCfg, forward, init_params, loss_fn
+from .serve_model import decode_step, init_cache, prefill

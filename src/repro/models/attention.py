@@ -1,0 +1,263 @@
+"""Attention: GQA with RoPE/qk-norm, blockwise (flash-style) training path,
+sliding-window variant, and single-token decode against a KV cache.
+
+The blockwise path is the memory-safe formulation for 32k prefill / 4k x 256
+training shapes: an outer ``lax.map`` over query blocks and an inner
+``lax.scan`` over KV blocks carrying the online-softmax (m, l, acc) state —
+O(S * block) live memory instead of O(S^2).
+
+``blockwise_attention`` carries a CUSTOM VJP implementing the true flash
+backward (Dao et al.): the forward saves only the per-row logsumexp L and
+the output O; the backward recomputes score blocks on the fly and
+accumulates dQ/dK/dV blockwise.  Differentiating the naive online-softmax
+loop instead makes JAX save every (q_block x kv_block) probability tile —
+the baseline dry-run measured those stacked f32 tiles at ~40% of all HBM
+traffic on the training cells (EXPERIMENTS.md §Perf iteration 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, nkv, grp, hd), k: (B, Skv, nkv, hd) -> (B, nkv, grp, Sq, Skv)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+
+
+def _mask_bias(qpos, kpos, causal: bool, window: Optional[int]):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, positions=None):
+    """Reference attention. q: (B,S,nh,hd), k/v: (B,S,nkv,hd)."""
+    b, sq, nh, hd = q.shape
+    nkv = k.shape[2]
+    grp = nh // nkv
+    qg = q.reshape(b, sq, nkv, grp, hd) * (hd ** -0.5)
+    scores = _gqa_scores(qg, k)
+    qpos = positions if positions is not None else jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    scores = scores + _mask_bias(qpos, kpos, causal, window)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, sq, nh, hd)
+
+
+def _bias_block(qpos, kpos, causal, window, skv):
+    """(qb, kvb) additive mask for one (q_block, kv_block) tile."""
+    b = jnp.zeros((qpos.shape[0], kpos.shape[0]), jnp.float32)
+    if causal:
+        b = jnp.where(qpos[:, None] >= kpos[None, :], b, NEG_INF)
+    if window is not None:
+        b = jnp.where((qpos[:, None] - kpos[None, :]) < window, b, NEG_INF)
+    if skv is not None:
+        b = jnp.where(kpos[None, :] < skv, b, NEG_INF)
+    return b
+
+
+def _rep(x, grp):
+    return jnp.repeat(x, grp, axis=2) if grp > 1 else x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_block, kv_block, skv):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block, skv)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block, skv):
+    """q pre-scaled (B, Sp, nh, hd); k/v (B, Skp, nkv, hd); Sp/Skp padded.
+    Returns (out (B, Sp, nh, hd), lse (B, nh, Sp))."""
+    b, sp, nh, hd = q.shape
+    skp, nkv = k.shape[1], k.shape[2]
+    grp = nh // nkv
+    nq, nk = sp // q_block, skp // kv_block
+    qg = q.reshape(b, nq, q_block, nh, hd)
+    kb = k.reshape(b, nk, kv_block, nkv, hd)
+    vb = v.reshape(b, nk, kv_block, nkv, hd)
+
+    def q_step(qi):
+        qblk = qg[:, qi]                      # (B, qb, nh, hd)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = _rep(jax.lax.dynamic_index_in_dim(kb, ki, 1, False), grp)
+            vblk = _rep(jax.lax.dynamic_index_in_dim(vb, ki, 1, False), grp)
+            kpos = ki * kv_block + jnp.arange(kv_block)
+            s_blk = jnp.einsum("bqhd,bshd->bhqs", qblk,
+                               kblk).astype(jnp.float32)
+            s_blk = s_blk + _bias_block(qpos, kpos, causal, window, skv)
+            m_new = jnp.maximum(m, s_blk.max(-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(q.dtype),
+                vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, nh, q_block), NEG_INF, jnp.float32),
+                jnp.zeros((b, nh, q_block), jnp.float32),
+                jnp.zeros((b, nh, q_block, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse                        # (B, nh, qb, hd), (B, nh, qb)
+
+    outs, lses = jax.lax.map(q_step, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, nh, sp, hd)   # (B, nh, Sp, hd)
+    out = out.transpose(0, 2, 1, 3).astype(q.dtype)          # (B, Sp, nh, hd)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(b, nh, sp)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, q_block, kv_block, skv):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_block, kv_block,
+                               skv)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_block, kv_block, skv, res, g):
+    """True flash backward: recompute score tiles; O(S*block) live memory.
+
+    dS = P * (dP - D),  dP = dO V^T,  D = rowsum(dO * O)
+    dQ = dS K,  dK = dS^T Q,  dV = P^T dO
+    """
+    q, k, v, out, lse = res
+    b, sp, nh, hd = q.shape
+    skp, nkv = k.shape[1], k.shape[2]
+    grp = nh // nkv
+    nq, nk = sp // q_block, skp // kv_block
+    g = g.astype(q.dtype)
+    d_rows = jnp.einsum("bshd,bshd->bhs", g.astype(jnp.float32),
+                        out.astype(jnp.float32))             # (B, nh, Sp)
+    qg = q.reshape(b, nq, q_block, nh, hd)
+    gg = g.reshape(b, nq, q_block, nh, hd)
+    kb = k.reshape(b, nk, kv_block, nkv, hd)
+    vb = v.reshape(b, nk, kv_block, nkv, hd)
+    lse_b = lse.reshape(b, nh, nq, q_block)
+    d_b = d_rows.reshape(b, nh, nq, q_block)
+
+    def tile(qi, ki):
+        """Recompute (p, ds) for one tile; used by both passes."""
+        qblk = qg[:, qi]
+        gblk = gg[:, qi]
+        kblk = _rep(jax.lax.dynamic_index_in_dim(kb, ki, 1, False), grp)
+        vblk = _rep(jax.lax.dynamic_index_in_dim(vb, ki, 1, False), grp)
+        qpos = qi * q_block + jnp.arange(q_block)
+        kpos = ki * kv_block + jnp.arange(kv_block)
+        s_blk = jnp.einsum("bqhd,bshd->bhqs", qblk, kblk).astype(jnp.float32)
+        s_blk = s_blk + _bias_block(qpos, kpos, causal, window, skv)
+        p = jnp.exp(s_blk - lse_b[:, :, qi][..., None])      # (B,nh,qb,kvb)
+        dp = jnp.einsum("bqhd,bshd->bhqs", gblk,
+                        vblk).astype(jnp.float32)
+        ds = p * (dp - d_b[:, :, qi][..., None])
+        return p, ds, qblk, gblk, kblk, vblk
+
+    # SINGLE-PASS sweep (§Perf iteration 6): every (qi, ki) tile is visited
+    # exactly once — dK/dV accumulate per outer-ki step while the matching
+    # dQ block contributions accumulate into a carried full-dQ buffer.
+    # Halves the tile recomputes AND the cross-shard K/V re-gathers of the
+    # original two-pass formulation (dq buffer: b*sp*nh_local*hd f32,
+    # tens of MB/device at the assigned shapes).
+    def kv_outer(dq, ki):
+        def q_inner(carry, qi):
+            dq, dk, dv = carry
+            p, ds, qblk, gblk, kblk, _ = tile(qi, ki)
+            dv = dv + jnp.einsum("bhqs,bqhd->bshd", p.astype(q.dtype),
+                                 gblk).astype(jnp.float32)
+            dk = dk + jnp.einsum("bhqs,bqhd->bshd", ds.astype(q.dtype),
+                                 qblk).astype(jnp.float32)
+            dq_blk = jnp.einsum("bhqs,bshd->bqhd", ds.astype(q.dtype),
+                                kblk).astype(jnp.float32)
+            dq = jax.lax.dynamic_update_slice_in_dim(
+                dq, jax.lax.dynamic_slice_in_dim(dq, qi * q_block, q_block,
+                                                 1) + dq_blk,
+                qi * q_block, axis=1)
+            return (dq, dk, dv), None
+        z = jnp.zeros((b, kv_block, nh, hd), jnp.float32)
+        (dq, dk, dv), _ = jax.lax.scan(q_inner, (dq, z, z), jnp.arange(nq))
+        if grp > 1:   # fold the repeated heads back onto the KV heads
+            dk = dk.reshape(b, kv_block, nkv, grp, hd).sum(3)
+            dv = dv.reshape(b, kv_block, nkv, grp, hd).sum(3)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, sp, nh, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_outer, dq0, jnp.arange(nk))
+    dq = dq.astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, skp, nkv, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, skp, nkv, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None,
+                        q_block=512, kv_block=1024, vjp="flash"):
+    """Flash-style online-softmax attention, O(S*block) memory in BOTH
+    passes (custom VJP — see module docstring).
+
+    q: (B, S, nh, hd); k/v: (B, S, nkv, hd).  GQA is handled by repeating
+    the KV heads *per block inside the loop* — every live tensor is then
+    plain (..., nh, ...)-major, which keeps SPMD head-sharding clean (a
+    grouped (nkv, grp) layout makes GSPMD fall back to "involuntary full
+    rematerialization" resharding on the backward pass).
+
+    ``vjp="naive"`` differentiates the forward loop directly (saves the
+    probability tiles — the pre-optimization baseline, kept selectable for
+    the §Perf A/B).
+    """
+    b, s, nh, hd = q.shape
+    skv = k.shape[1]
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, skv)
+    pq, pk = -s % q_block, -skv % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qs = (q * (hd ** -0.5)).astype(q.dtype)
+    if vjp == "naive":
+        out = _flash_fwd_impl(qs, k, v, causal, window, q_block, kv_block,
+                              skv if pk else None)[0]
+    else:
+        out = _flash(qs, k, v, causal, window, q_block, kv_block,
+                     skv if pk else None)
+    return out[:, :s]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     ring_offset=None):
+    """One-token attention against a cache.
+
+    q: (B, 1, nh, hd); k/v_cache: (B, W, nkv, hd); cache_len: scalar count of
+    valid entries.  ``ring_offset`` marks the logical start for sliding-
+    window ring buffers.  Returns (B, 1, nh, hd).
+    """
+    b, w, nkv, hd = k_cache.shape
+    nh = q.shape[2]
+    grp = nh // nkv
+    qg = q.reshape(b, 1, nkv, grp, hd) * (hd ** -0.5)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    idx = jnp.arange(w)
+    valid = idx < cache_len
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
+    return out.reshape(b, 1, nh, hd)

@@ -1,0 +1,454 @@
+"""Unified language-model definition for every assigned architecture.
+
+One config dataclass + one functional model covering:
+
+  dense / vlm — GQA transformer (RoPE or M-RoPE, optional qk-norm)
+  moe         — GQA transformer with top-k MoE FFNs (EP-shardable)
+  ssm         — Mamba-2 (SSD) stacks
+  hybrid      — Griffin/RecurrentGemma pattern (rec, rec, local-attn)
+  audio       — Whisper-style encoder-decoder (conv frontend stubbed)
+
+Layers are stacked and scanned per *pattern period* (compile-time compact:
+HLO size is independent of depth); remainder layers run unrolled.  Every
+weight matmul passes through the TC policy hook, which is how the paper's
+transprecision reconfiguration enters the model.
+
+Params and caches are plain dict pytrees.  ``forward`` is the training/
+prefill path; ``decode_step`` is the single-token serving path carrying
+KV caches / SSM states / RG-LRU states / conv states as appropriate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.quant import maybe_dequant
+from ..core.transprecision import BF16, TCPolicy
+from . import attention, moe as moe_mod, rglru as rglru_mod, ssm as ssm_mod
+from .common import (constrain, cross_entropy, dense_init, embed_init,
+                     mrope_freqs, rms_norm, rope_freqs, apply_rope,
+                     sinusoid_positions)
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str = "model"
+    family: str = "dense"      # dense | vlm | moe | ssm | hybrid | audio
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 0            # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 256
+    mlp: str = "swiglu"        # swiglu | gelu
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    mrope: bool = False
+    window: Optional[int] = None         # sliding-window for local attn
+    pattern: Tuple[str, ...] = ("attn",)  # cycled block types
+    # MoE
+    moe_experts: int = 0
+    moe_topk: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+    conv_kernel: int = 4
+    # audio (whisper-style enc-dec)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    # execution
+    dtype_name: str = "bfloat16"
+    remat: str = "full"        # none | dots | full (full = save block inputs
+                               # only; "dots" blows past HBM on MoE/FFN-heavy
+                               # configs at the assigned shapes)
+    scan_layers: bool = True
+    q_block: int = 512
+    kv_block: int = 1024
+    attn_vjp: str = "flash"    # flash (custom bwd) | naive (autodiff loop)
+    tie_embed: bool = False
+
+    # ---- derived ----
+    @property
+    def dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype_name]
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_pad(self) -> int:
+        return _round_up(self.vocab, 256)
+
+    @property
+    def block_types(self) -> Tuple[str, ...]:
+        if self.family == "ssm":
+            base = ("ssm",)
+        elif self.family == "hybrid":
+            base = self.pattern
+        else:
+            base = ("attn",)
+        reps = (self.n_layers + len(base) - 1) // len(base)
+        return (base * reps)[: self.n_layers]
+
+    @property
+    def period(self) -> Tuple[str, ...]:
+        return self.pattern if self.family == "hybrid" else (self.block_types[0],)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period)
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - self.n_periods * len(self.period)
+
+    def param_count(self) -> int:
+        p = init_params(jax.random.PRNGKey(0), self, abstract=True)
+        return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ModelCfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 12)
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wq": dense_init(ks[0], (d, nh * hd), dtype=cfg.dtype),
+        "wk": dense_init(ks[1], (d, nkv * hd), dtype=cfg.dtype),
+        "wv": dense_init(ks[2], (d, nkv * hd), dtype=cfg.dtype),
+        "wo": dense_init(ks[3], (nh * hd, d), dtype=cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), jnp.float32)
+        p["wq_x"] = dense_init(ks[4], (d, nh * hd), dtype=cfg.dtype)
+        p["wk_x"] = dense_init(ks[5], (d, nkv * hd), dtype=cfg.dtype)
+        p["wv_x"] = dense_init(ks[6], (d, nkv * hd), dtype=cfg.dtype)
+        p["wo_x"] = dense_init(ks[7], (nh * hd, d), dtype=cfg.dtype)
+    p["ln2"] = jnp.zeros((d,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[8], d, cfg.d_ff, cfg.moe_experts, cfg.dtype)
+    else:
+        wi_cols = 2 * cfg.d_ff if cfg.mlp == "swiglu" else cfg.d_ff
+        p["wi"] = dense_init(ks[9], (d, wi_cols), dtype=cfg.dtype)
+        p["wo_mlp"] = dense_init(ks[10], (cfg.d_ff, d), dtype=cfg.dtype)
+    return p
+
+
+def _init_rec_block(key, cfg: ModelCfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    wi_cols = 2 * cfg.d_ff if cfg.mlp == "swiglu" else cfg.d_ff
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wx": dense_init(ks[0], (d, d), dtype=cfg.dtype),
+        "wy": dense_init(ks[1], (d, d), dtype=cfg.dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_kernel, d), dtype=cfg.dtype),
+        "rglru": rglru_mod.init_rglru(ks[3], d, cfg.dtype),
+        "w_out": dense_init(ks[4], (d, d), dtype=cfg.dtype),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wi": dense_init(ks[5], (d, wi_cols), dtype=cfg.dtype),
+        "wo_mlp": dense_init(ks[6], (cfg.d_ff, d), dtype=cfg.dtype),
+    }
+
+
+def _init_block(key, cfg: ModelCfg, btype: str, cross=False):
+    if btype == "attn":
+        return _init_attn_block(key, cfg, cross=cross)
+    if btype == "rec":
+        return _init_rec_block(key, cfg)
+    if btype == "ssm":
+        p = ssm_mod.init_mamba2(key, cfg, cfg.dtype)
+        p["ln"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return p
+    raise ValueError(btype)
+
+
+def _stack_init(key, cfg: ModelCfg, n: int, types, cross=False):
+    """Stack n periods of block params (leading axis = period index)."""
+    def one(k):
+        ks = jax.random.split(k, len(types))
+        return tuple(_init_block(ki, cfg, t, cross=cross) for ki, t in zip(ks, types))
+    keys = jax.random.split(key, n)
+    return jax.vmap(one)(keys)
+
+
+def init_params(key, cfg: ModelCfg, abstract: bool = False):
+    def build(key):
+        ks = jax.random.split(key, 8)
+        p: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (cfg.vocab_pad, cfg.d_model), cfg.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embed:
+            p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_pad),
+                                      dtype=cfg.dtype)
+        cross = cfg.family == "audio"
+        p["blocks"] = _stack_init(ks[2], cfg, cfg.n_periods, cfg.period, cross=cross)
+        if cfg.n_tail:
+            tail_types = cfg.block_types[cfg.n_periods * len(cfg.period):]
+            tks = jax.random.split(ks[3], cfg.n_tail)
+            p["tail"] = tuple(_init_block(k, cfg, t, cross=cross)
+                              for k, t in zip(tks, tail_types))
+        if cfg.family == "audio":
+            p["enc_blocks"] = _stack_init(ks[4], cfg, cfg.enc_layers, ("attn",))
+            p["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        return p
+
+    if abstract:
+        return jax.eval_shape(build, key)
+    return build(key)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _qw(policy: TCPolicy, role):
+    def q(w):
+        return policy.quantize_weight(w, role)
+    return q
+
+
+def _mlp(p, x, cfg, policy):
+    q = _qw(policy, "mlp_weights")
+    h = jnp.einsum("bsd,df->bsf", x, q(p["wi"]))
+    if cfg.mlp == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, q(p["wo_mlp"]))
+
+
+def _qkv(p, x, cfg, policy, prefix=""):
+    """Fused QKV projection: ONE einsum over concat(wq, wk, wv).
+
+    Structural collective optimization (§Perf "fused projections"): with
+    tensor parallelism the backward of each x @ W needs a psum of the
+    (b, s, d) cotangent over "model"; three separate projections cost three
+    all-reduces per layer, the fused one costs one.  The concat itself is
+    weight-sized (recomputed under remat), negligible next to activations.
+    """
+    q_ = _qw(policy, "attn_weights")
+    b, s, d = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    wq, wk, wv = (q_(p[prefix + "wq"]), q_(p[prefix + "wk"]),
+                  q_(p[prefix + "wv"]))
+    wqkv = jnp.concatenate([wq, wk, wv], axis=-1)
+    qkv = jnp.einsum("bsd,dk->bsk", x, wqkv)
+    qp, kp, vp = jnp.split(qkv, [nh * hd, (nh + nkv) * hd], axis=-1)
+    qp = qp.reshape(b, s, nh, hd)
+    kp = kp.reshape(b, s, nkv, hd)
+    vp = vp.reshape(b, s, nkv, hd)
+    if cfg.qk_norm and not prefix:
+        qp = rms_norm(qp, p["q_norm"])
+        kp = rms_norm(kp, p["k_norm"])
+    return qp, kp, vp
+
+
+def _rope_cs(cfg, positions, batched=False):
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(positions, (3,) + positions.shape) \
+            if positions.ndim == 2 else positions
+        half = cfg.head_dim // 2
+        sec = (half - 2 * ((half // 8) * 3), (half // 8) * 3, (half // 8) * 3)
+        return mrope_freqs(cfg.head_dim, cfg.rope_theta, pos3, sections=sec)
+    return rope_freqs(cfg.head_dim, cfg.rope_theta, positions)
+
+
+def _attn_block(p, x, cfg: ModelCfg, policy, *, causal=True, use_rope=True,
+                window=None, memory=None):
+    """Training/prefill attention block (+MLP). memory: (enc_x) for cross."""
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln"])
+    qp, kp, vp = _qkv(p, h, cfg, policy)
+    if use_rope:
+        pos = jnp.arange(s)
+        cos, sin = _rope_cs(cfg, pos[None, :].repeat(b, 0)) if cfg.mrope \
+            else _rope_cs(cfg, pos)
+        qp = apply_rope(qp, cos, sin)
+        kp = apply_rope(kp, cos, sin)
+    qp = constrain(qp, "batch", None, "heads", None)
+    ao = attention.blockwise_attention(qp, kp, vp, causal=causal, window=window,
+                                       q_block=cfg.q_block, kv_block=cfg.kv_block,
+                                       vjp=cfg.attn_vjp)
+    ao = jnp.einsum("bsk,kd->bsd",
+                    ao.reshape(b, s, -1), _qw(policy, "attn_weights")(p["wo"]))
+    x = x + ao
+    if memory is not None:  # cross attention (audio decoder)
+        hx = rms_norm(x, p["ln_x"])
+        qx = jnp.einsum("bsd,dk->bsk", hx, maybe_dequant(p["wq_x"])).reshape(
+            b, s, cfg.n_heads, cfg.head_dim)
+        kx = jnp.einsum("bsd,dk->bsk", memory, maybe_dequant(p["wk_x"])).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        vx = jnp.einsum("bsd,dk->bsk", memory, maybe_dequant(p["wv_x"])).reshape(
+            b, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        xo = attention.blockwise_attention(qx, kx, vx, causal=False,
+                                           q_block=cfg.q_block,
+                                           kv_block=cfg.kv_block,
+                                           vjp=cfg.attn_vjp)
+        x = x + jnp.einsum("bsk,kd->bsd", xo.reshape(b, s, -1), maybe_dequant(p["wo_x"]))
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        mo, aux = moe_mod.moe_ffn(p["moe"], h2, top_k=cfg.moe_topk,
+                                  capacity_factor=cfg.capacity_factor,
+                                  quantize_w=_qw(policy, "mlp_weights"))
+    else:
+        mo, aux = _mlp(p, h2, cfg, policy), 0.0
+    return x + mo, aux
+
+
+def _rec_block(p, x, cfg, policy, *, h0=None, conv_state=None):
+    """Griffin recurrent block (+MLP). Sequence mode (decode via _rec_step).
+    wx/wy fused into one einsum (one bwd psum instead of two — §Perf)."""
+    h = rms_norm(x, p["ln"])
+    wxy = jnp.concatenate([maybe_dequant(p["wy"]), maybe_dequant(p["wx"])],
+                          axis=-1)
+    yu = jnp.einsum("bsd,dk->bsk", h, wxy)
+    gate_in, u = jnp.split(yu, 2, axis=-1)
+    gate = jax.nn.gelu(gate_in)
+    k = cfg.conv_kernel
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    u = sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(k))
+    y, h_last = rglru_mod.rglru(p["rglru"], u, h0=h0)
+    out = jnp.einsum("bsk,kd->bsd", y * gate, maybe_dequant(p["w_out"]))
+    x = x + out
+    x = x + _mlp(p, rms_norm(x, p["ln2"]), cfg, policy)
+    return x, h_last
+
+
+def _ssm_block(p, x, cfg, policy, states=None):
+    h = rms_norm(x, p["ln"])
+    conv_state, ssm_state = states if states is not None else (None, None)
+    y, new_states = ssm_mod.mamba2_layer(
+        p, h, cfg, conv_state=conv_state, ssm_state=ssm_state,
+        quantize_w=_qw(policy, "mlp_weights"))
+    return x + y.astype(x.dtype), new_states
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / scoring)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(btype: str, p, x, cfg, policy, memory=None):
+    if btype == "attn":
+        window = cfg.window if (cfg.family == "hybrid" or cfg.window) else None
+        return _attn_block(p, x, cfg, policy, causal=True, window=window,
+                           memory=memory)
+    if btype == "rec":
+        out, _ = _rec_block(p, x, cfg, policy)
+        return out, 0.0
+    if btype == "ssm":
+        out, _ = _ssm_block(p, x, cfg, policy)
+        return out, 0.0
+    raise ValueError(btype)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+
+def _run_stack(blocks, tail, x, cfg, policy, memory=None, causal=True):
+    period = cfg.period
+
+    def period_fn(x, pparams):
+        # sequence-parallel residual stream: the saved remat residual per
+        # period is (b/data, s/model, d) — without this the stacked scan
+        # residuals alone exceed HBM at the assigned training shapes
+        x = constrain(x, "batch", "seq", None)
+        aux = 0.0
+        for i, btype in enumerate(period):
+            p_i = pparams[i]  # pparams: tuple of per-type dicts (one period)
+            if btype == "attn" and not causal:
+                x, a = _attn_block(p_i, x, cfg, policy, causal=False,
+                                   use_rope=False)
+            else:
+                x, a = _block_fwd(btype, p_i, x, cfg, policy, memory=memory)
+            aux = aux + a
+        return x, aux
+
+    period_fn = _remat(period_fn, cfg)
+
+    if cfg.scan_layers:
+        def scan_body(carry, pparams):
+            x, aux = carry
+            x, a = period_fn(x, pparams)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(scan_body, (x, 0.0), blocks)
+    else:
+        aux = 0.0
+        n = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+        for i in range(n):
+            pparams = jax.tree.map(lambda a: a[i], blocks)
+            x, a = period_fn(x, pparams)
+            aux = aux + a
+    if tail:
+        for p_i, btype in zip(tail, cfg.block_types[cfg.n_periods * len(cfg.period):]):
+            x, a = _block_fwd(btype, p_i, x, cfg, policy, memory=memory)
+            aux = aux + a
+    return x, aux
+
+
+def _encode_audio(params, frames, cfg, policy):
+    x = frames.astype(cfg.dtype) + sinusoid_positions(
+        frames.shape[1], cfg.d_model).astype(cfg.dtype)
+    x, _ = _run_stack(params["enc_blocks"], None, x, cfg, policy, causal=False)
+    return rms_norm(x, params["enc_norm"])
+
+
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelCfg,
+            policy: TCPolicy = BF16):
+    """Returns (logits (B, S, vocab_pad), aux_loss)."""
+    if cfg.family in ("vlm",) and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        tokens = batch["tokens"]
+        emb = params["embed"]
+        emb_q = policy.quantize_weight(emb, "embed_weights")
+        x = emb_q[tokens].astype(cfg.dtype)
+    x = constrain(x, "batch", None, None)
+    memory = None
+    if cfg.family == "audio":
+        memory = _encode_audio(params, batch["frames"], cfg, policy)
+    x, aux = _run_stack(params["blocks"], params.get("tail"), x, cfg, policy,
+                        memory=memory)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    head = policy.quantize_weight(head, "embed_weights", node="lm_head")
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelCfg, policy: TCPolicy = BF16):
+    logits, aux = forward(params, batch, cfg, policy)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer: top-k routing with dense (one-hot) dispatch.
+
+GShard/Switch-style capacity-based dispatch via einsums — fully static
+shapes, differentiable, and expert-parallel: the expert axis shards on
+"model" (one or more experts per chip) with all-to-all traffic expressed by
+XLA from the dispatch/combine einsum shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, dense_init
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "router": dense_init(k1, (d_model, n_experts), dtype=jnp.float32),
+        "wi": dense_init(k2, (n_experts, d_model, 2 * d_ff), dtype=dtype),
+        "wo": dense_init(k3, (n_experts, d_ff, d_model), dtype=dtype),
+    }
+
+
+def _route(params, tokens, top_k: int, capacity_factor: float):
+    """Shared router: returns (gate_k, idx_k, pos, keep, cap, aux).
+
+    ``capacity_factor <= 0`` selects DROPLESS routing (cap = T, the
+    worst-case per-expert load): batch-size-invariant outputs, used by the
+    serving paths where capacity drops would corrupt generation."""
+    t = tokens.shape[0]
+    n_exp = params["router"].shape[-1]
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", tokens.astype(jnp.float32), params["router"]))
+    gate_k, idx_k = jax.lax.top_k(gates, top_k)               # (T, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+    cap = t if capacity_factor <= 0 else max(
+        1, int(capacity_factor * top_k * t / n_exp))
+    onehot = jax.nn.one_hot(idx_k, n_exp, dtype=jnp.int32)    # (T, k, E)
+    flat = onehot.reshape(t * top_k, n_exp)
+    pos_in_exp = (jnp.cumsum(flat, axis=0) - flat).reshape(t, top_k, n_exp)
+    pos = (pos_in_exp * onehot).sum(-1)                       # (T, k)
+    keep = (pos < cap) & (onehot.sum(-1) > 0)
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = gates.mean(0)
+    fe = (onehot.sum(1) > 0).astype(jnp.float32).mean(0)
+    aux = n_exp * jnp.sum(me * fe)
+    return gate_k, idx_k, pos, keep, cap, aux
+
+
+def _expert_ffn(params, xe, quantize_w):
+    """xe: (E, C, d) -> (E, C, d) gated SwiGLU per expert."""
+    wi, wo = params["wi"], params["wo"]
+    if quantize_w is not None:
+        wi, wo = quantize_w(wi), quantize_w(wo)
+    h = jnp.einsum("ecd,edf->ecf", xe, wi)
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def moe_ffn(params, x, *, top_k: int, capacity_factor: float = 1.25,
+            quantize_w=None, dispatch: str = "auto"
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Two dispatch strategies with identical semantics (tested against each
+    other):
+
+    * ``einsum``  — GShard dense one-hot dispatch/combine.  O(T*E*C) dispatch
+      tensors: fine for small T, catastrophic at 1M-token training cells.
+    * ``scatter`` — indexed dispatch: scatter (token-id, gate) into (E, C)
+      slot tables, gather tokens into expert batches, scatter-add results
+      back.  O(T*k + E*C*d) memory — the production path at scale.
+
+    ``auto`` picks scatter once the dense dispatch tensor would exceed 2^22
+    elements.  Tokens over capacity are dropped (standard capacity batching).
+    """
+    b, s, d = x.shape
+    n_exp = params["router"].shape[-1]
+    t = b * s
+    tokens = x.reshape(t, d)
+    gate_k, idx_k, pos, keep, cap, aux = _route(params, tokens, top_k,
+                                                capacity_factor)
+    if dispatch == "auto":
+        dispatch = "einsum" if t * n_exp * cap <= (1 << 22) else "scatter"
+
+    if dispatch == "einsum":
+        disp = (jax.nn.one_hot(idx_k, n_exp, dtype=x.dtype)[..., None]
+                * jax.nn.one_hot(pos, cap, dtype=x.dtype)[..., None, :]
+                * keep[..., None, None].astype(x.dtype))      # (T,k,E,C)
+        comb = disp * gate_k[..., None, None].astype(x.dtype)
+        disp_t = disp.sum(1)                                  # (T, E, C)
+        comb_t = comb.sum(1)
+        xe = jnp.einsum("td,tec->ecd", tokens, disp_t)        # (E, C, d)
+        xe = constrain(xe, "expert", None, None)
+        ye = _expert_ffn(params, xe, quantize_w)
+        ye = constrain(ye, "expert", None, None)
+        out = jnp.einsum("ecd,tec->td", ye, comb_t)
+    else:
+        # slot tables: which token fills (e, c), and with what gate weight
+        flat_e = idx_k.reshape(-1)                            # (T*k,)
+        flat_p = pos.reshape(-1)
+        flat_keep = keep.reshape(-1)
+        flat_gate = (gate_k.reshape(-1) * flat_keep).astype(jnp.float32)
+        tok_ids = jnp.repeat(jnp.arange(t), top_k)
+        # dropped entries write to a trash slot (cap index == cap)
+        flat_p = jnp.where(flat_keep, flat_p, cap)
+        slot_tok = jnp.zeros((n_exp, cap + 1), jnp.int32).at[
+            flat_e, flat_p].set(tok_ids, mode="drop")[:, :cap]
+        slot_gate = jnp.zeros((n_exp, cap + 1), jnp.float32).at[
+            flat_e, flat_p].set(flat_gate, mode="drop")[:, :cap]
+        slot_used = jnp.zeros((n_exp, cap + 1), jnp.bool_).at[
+            flat_e, flat_p].set(flat_keep, mode="drop")[:, :cap]
+        xe = tokens[slot_tok] * slot_used[..., None].astype(x.dtype)
+        xe = constrain(xe, "expert", None, None)
+        ye = _expert_ffn(params, xe, quantize_w)
+        ye = constrain(ye, "expert", None, None)
+        contrib = ye * slot_gate[..., None].astype(ye.dtype)
+        out = jnp.zeros((t, d), x.dtype).at[
+            slot_tok.reshape(-1)].add(
+                contrib.reshape(n_exp * cap, d) *
+                slot_used.reshape(-1, 1).astype(ye.dtype))
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,353 @@
+"""Serving path: cache init, prefill, single-token decode for every family.
+
+Caches are plain pytrees, stacked over pattern periods so decode scans over
+layers exactly like training does (HLO size independent of depth):
+
+  attn : {"k","v"}  (P, B, W, nkv, hd)   W = min(window or max_len, max_len)
+  rec  : {"h"} (P, B, d), {"conv"} (P, B, K-1, d)
+  ssm  : {"state"} (P, B, nh, hd, ds), {"conv"} (P, B, K-1, conv_ch)
+  audio adds per-layer cross K/V over the encoder memory.
+
+Attention writes are ring-buffered (idx = pos mod W) so sliding-window archs
+(recurrentgemma) keep O(window) memory during ``long_500k`` decode while the
+full-attention archs use W = max_len.  The distributed decode-attention
+(KV-sequence sharding + LSE combine) lives in ``repro/serve/distributed.py``
+— this module is the per-shard math it wraps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import maybe_dequant
+from ..core.transprecision import BF16, TCPolicy
+from . import attention, rglru as rglru_mod, ssm as ssm_mod
+from .common import apply_rope, rms_norm
+from .lm import ModelCfg, _mlp, _qkv, _qw, _rope_cs, forward
+
+
+def _attn_w(cfg: ModelCfg, max_len: int) -> int:
+    if cfg.window:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def _kv_fmt(policy: TCPolicy):
+    """Packed-KV posit format if the policy stores the cache as codes."""
+    from ..core.formats import PositFormat, get
+    if policy is not None and policy.packed_kv and policy.kv_cache:
+        f = get(policy.kv_cache)
+        if isinstance(f, PositFormat):
+            return f
+    return None
+
+
+def init_cache(cfg: ModelCfg, batch: int, max_len: int,
+               dtype=None, policy: TCPolicy = BF16) -> Dict[str, Any]:
+    """Empty decode state for a batch of sequences up to max_len tokens.
+
+    With ``policy.packed_kv`` the attention K/V rings hold posit CODES
+    (uint8/16) — the decode-on-read datapath; recurrent/SSM states stay
+    full precision (they are rewritten every step)."""
+    fmt = _kv_fmt(policy)
+    dt = dtype or (fmt.storage_dtype if fmt is not None else cfg.dtype)
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    w = _attn_w(cfg, max_len)
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh_ssm = d_in // cfg.ssm_headdim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+
+    def block_cache(btype: str, stacked: int):
+        def z(shape, dtype=dt):
+            s = (stacked,) + shape if stacked else shape
+            return jnp.zeros(s, dtype)
+        if btype == "attn":
+            c = {"k": z((batch, w, nkv, hd)), "v": z((batch, w, nkv, hd))}
+            if cfg.family == "audio":
+                # cross K/V stay unpacked (written once at prefill)
+                c["xk"] = z((batch, cfg.enc_seq, nkv, hd), cfg.dtype)
+                c["xv"] = z((batch, cfg.enc_seq, nkv, hd), cfg.dtype)
+            return c
+        if btype == "rec":
+            return {"h": z((batch, cfg.d_model), jnp.float32),
+                    "conv": z((batch, cfg.conv_kernel - 1, cfg.d_model),
+                              cfg.dtype)}
+        if btype == "ssm":
+            return {"state": z((batch, nh_ssm, cfg.ssm_headdim, cfg.ssm_state),
+                               jnp.float32),
+                    "conv": z((batch, cfg.conv_kernel - 1, conv_ch),
+                              cfg.dtype)}
+        raise ValueError(btype)
+
+    cache: Dict[str, Any] = {
+        "pos": jnp.zeros((), jnp.int32),
+        "blocks": tuple(block_cache(t, cfg.n_periods) for t in cfg.period),
+    }
+    if cfg.n_tail:
+        tail_types = cfg.block_types[cfg.n_periods * len(cfg.period):]
+        cache["tail"] = tuple(block_cache(t, 0) for t in tail_types)
+    if cfg.family == "audio":
+        cache["memory"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dt)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Per-block decode steps
+# ---------------------------------------------------------------------------
+
+def _ring_write(buf, val, pos, fmt=None):
+    """buf: (B, W, ...); val: (B, 1, ...); write at pos mod W.
+    With ``fmt`` the buffer holds posit codes: encode-on-write."""
+    from ..core import posit
+    w = buf.shape[1]
+    if fmt is not None:
+        val = posit.encode_f32(val.astype(jnp.float32), fmt)
+    return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype),
+                                               pos % w, axis=1)
+
+
+def _attn_decode(p, c, x, cfg, policy, pos, memory=None, attn_impl=None):
+    from ..core import posit
+    b = x.shape[0]
+    fmt = _kv_fmt(policy)
+    h = rms_norm(x, p["ln"])
+    qp, kp, vp = _qkv(p, h, cfg, policy)
+    posv = jnp.full((b, 1), pos) if cfg.mrope else pos[None]
+    cos, sin = _rope_cs(cfg, posv)
+    qp = apply_rope(qp, cos, sin)
+    kp = apply_rope(kp, cos, sin)
+    k_cache = _ring_write(c["k"], kp, pos, fmt)
+    v_cache = _ring_write(c["v"], vp, pos, fmt)
+    w = k_cache.shape[1]
+    if fmt is not None:   # decode-on-read: HBM carries bits/16 of bf16
+        k_read = posit.decode_to_f32(k_cache, fmt).astype(cfg.dtype)
+        v_read = posit.decode_to_f32(v_cache, fmt).astype(cfg.dtype)
+    else:
+        k_read, v_read = k_cache, v_cache
+    attn_fn = attn_impl or attention.decode_attention
+    ao = attn_fn(qp, k_read, v_read, jnp.minimum(pos + 1, w))
+    x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, 1, -1),
+                       _qw(policy, "attn_weights")(p["wo"]))
+    new_c = dict(c)
+    new_c["k"], new_c["v"] = k_cache, v_cache
+    if memory is not None:
+        hx = rms_norm(x, p["ln_x"])
+        qx = jnp.einsum("bsd,dk->bsk", hx, maybe_dequant(p["wq_x"])).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim)
+        xo = attention.decode_attention(qx, c["xk"], c["xv"], c["xk"].shape[1])
+        x = x + jnp.einsum("bsk,kd->bsd", xo.reshape(b, 1, -1), maybe_dequant(p["wo_x"]))
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        from . import moe as moe_mod
+        mo, _ = moe_mod.moe_ffn(p["moe"], h2, top_k=cfg.moe_topk,
+                                capacity_factor=cfg.capacity_factor,
+                                quantize_w=_qw(policy, "mlp_weights"))
+    else:
+        mo = _mlp(p, h2, cfg, policy)
+    return x + mo, new_c
+
+
+def _rec_decode(p, c, x, cfg, policy):
+    b = x.shape[0]
+    h = rms_norm(x, p["ln"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", h, maybe_dequant(p["wy"])))
+    u = jnp.einsum("bsd,dk->bsk", h, maybe_dequant(p["wx"]))
+    window = jnp.concatenate([c["conv"], u.astype(c["conv"].dtype)], axis=1)
+    k = cfg.conv_kernel
+    u = sum(window[:, i:i + 1] * p["conv_w"][i] for i in range(k))
+    y, h_new = rglru_mod.rglru_step(p["rglru"], u, c["h"])
+    x = x + jnp.einsum("bsk,kd->bsd", y * gate, maybe_dequant(p["w_out"]))
+    x = x + _mlp(p, rms_norm(x, p["ln2"]), cfg, policy)
+    return x, {"h": h_new, "conv": window[:, 1:]}
+
+
+def _ssm_decode(p, c, x, cfg, policy):
+    h = rms_norm(x, p["ln"])
+    y, (conv_state, ssm_state) = ssm_mod.mamba2_layer(
+        p, h, cfg, conv_state=c["conv"], ssm_state=c["state"],
+        quantize_w=_qw(policy, "mlp_weights"))
+    return x + y, {"state": ssm_state, "conv": conv_state}
+
+
+def _block_decode(btype, p, c, x, cfg, policy, pos, memory=None,
+                  attn_impl=None):
+    if btype == "attn":
+        return _attn_decode(p, c, x, cfg, policy, pos, memory=memory,
+                            attn_impl=attn_impl)
+    if btype == "rec":
+        return _rec_decode(p, c, x, cfg, policy)
+    if btype == "ssm":
+        return _ssm_decode(p, c, x, cfg, policy)
+    raise ValueError(btype)
+
+
+def decode_step(params, cache, tokens, cfg: ModelCfg,
+                policy: TCPolicy = BF16,
+                embeds: Optional[jax.Array] = None,
+                attn_impl=None):
+    """One serving step. tokens: (B, 1) int32 (or embeds (B, 1, d) for vlm).
+    Returns (logits (B, vocab_pad), new_cache)."""
+    pos = cache["pos"]
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        emb = policy.quantize_weight(params["embed"], "embed_weights")
+        x = emb[tokens].astype(cfg.dtype)
+    memory = cache.get("memory") if cfg.family == "audio" else None
+
+    def scan_body(carry, pc):
+        x = carry
+        pparams, pcache = pc
+        new_caches = []
+        for i, btype in enumerate(cfg.period):
+            x, nc = _block_decode(btype, pparams[i], pcache[i], x, cfg,
+                                  policy, pos, memory=memory,
+                                  attn_impl=attn_impl)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    if cfg.n_tail:
+        tail_types = cfg.block_types[cfg.n_periods * len(cfg.period):]
+        new_tail = []
+        for p_i, c_i, btype in zip(params["tail"], cache["tail"], tail_types):
+            x, nc = _block_decode(btype, p_i, c_i, x, cfg, policy, pos,
+                                  memory=memory, attn_impl=attn_impl)
+            new_tail.append(nc)
+        new_cache["tail"] = tuple(new_tail)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))[:, 0]
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, batch, cfg: ModelCfg, max_len: int,
+            policy: TCPolicy = BF16):
+    """Run the prompt through the model, returning (last_logits, cache).
+
+    Functionally: forward() for the logits + a second pass's worth of cache
+    construction fused into the same stack traversal.
+    """
+    from .lm import _attn_block, _rec_block, _ssm_block  # local reuse
+    if cfg.family == "vlm" and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+        b, s = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        emb = policy.quantize_weight(params["embed"], "embed_weights")
+        x = emb[tokens].astype(cfg.dtype)
+    cache = init_cache(cfg, b, max_len)
+    w = _attn_w(cfg, max_len)
+    memory = None
+    if cfg.family == "audio":
+        from .lm import _encode_audio
+        memory = _encode_audio(params, batch["frames"], cfg, policy)
+        cache["memory"] = memory
+
+    start = max(s - w, 0)
+    length = min(s, w)
+    ring_idx = (start + jnp.arange(length)) % w
+
+    def fill(buf, kv):
+        return buf.at[:, ring_idx].set(kv[:, start:start + length].astype(buf.dtype))
+
+    def run_block(btype, p_i, c_i, x):
+        if btype == "attn":
+            h = rms_norm(x, p_i["ln"])
+            qp, kp, vp = _qkv(p_i, h, cfg, policy)
+            pos = jnp.arange(s)
+            cos, sin = _rope_cs(cfg, pos[None, :].repeat(b, 0)) if cfg.mrope \
+                else _rope_cs(cfg, pos)
+            qp = apply_rope(qp, cos, sin)
+            kp = apply_rope(kp, cos, sin)
+            ao = attention.blockwise_attention(
+                qp, kp, vp, causal=True,
+                window=cfg.window if cfg.family == "hybrid" or cfg.window else None,
+                q_block=cfg.q_block, kv_block=cfg.kv_block)
+            x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, s, -1),
+                               _qw(policy, "attn_weights")(p_i["wo"]))
+            nc = dict(c_i)
+            nc["k"] = fill(c_i["k"], kp)
+            nc["v"] = fill(c_i["v"], vp)
+            if memory is not None:
+                hx = rms_norm(x, p_i["ln_x"])
+                qx = jnp.einsum("bsd,dk->bsk", hx, p_i["wq_x"]).reshape(
+                    b, s, cfg.n_heads, cfg.head_dim)
+                kx = jnp.einsum("bsd,dk->bsk", memory, p_i["wk_x"]).reshape(
+                    b, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+                vx = jnp.einsum("bsd,dk->bsk", memory, p_i["wv_x"]).reshape(
+                    b, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+                xo = attention.blockwise_attention(qx, kx, vx, causal=False,
+                                                   q_block=cfg.q_block,
+                                                   kv_block=cfg.kv_block)
+                x = x + jnp.einsum("bsk,kd->bsd", xo.reshape(b, s, -1),
+                                   p_i["wo_x"])
+                nc["xk"], nc["xv"] = kx.astype(nc["xk"].dtype), vx.astype(nc["xv"].dtype)
+            h2 = rms_norm(x, p_i["ln2"])
+            if cfg.family == "moe":
+                from . import moe as moe_mod
+                mo, _ = moe_mod.moe_ffn(p_i["moe"], h2, top_k=cfg.moe_topk,
+                                        capacity_factor=cfg.capacity_factor,
+                                        quantize_w=_qw(policy, "mlp_weights"))
+            else:
+                mo = _mlp(p_i, h2, cfg, policy)
+            return x + mo, nc
+        if btype == "rec":
+            # track conv tail (raw u) + final hidden state
+            h = rms_norm(x, p_i["ln"])
+            u_raw = jnp.einsum("bsd,dk->bsk", h, p_i["wx"])
+            x, h_last = _rec_block(p_i, x, cfg, policy)
+            k = cfg.conv_kernel
+            pad = jnp.pad(u_raw, ((0, 0), (k - 1, 0), (0, 0)))
+            return x, {"h": h_last.astype(jnp.float32),
+                       "conv": pad[:, -(k - 1):].astype(cfg.dtype)}
+        if btype == "ssm":
+            h = rms_norm(x, p_i["ln"])
+            from .ssm import _split_streams
+            w_in = _qw(policy, "mlp_weights")(p_i["in_proj"])
+            zxbcdt = jnp.einsum("bsd,dk->bsk", h, w_in)
+            _, xBC_raw, _ = _split_streams(zxbcdt, cfg)
+            y, (_, ssm_state) = ssm_mod.mamba2_layer(
+                p_i, h, cfg, quantize_w=_qw(policy, "mlp_weights"))
+            k = cfg.conv_kernel
+            pad = jnp.pad(xBC_raw, ((0, 0), (k - 1, 0), (0, 0)))
+            return x + y.astype(x.dtype), {
+                "state": ssm_state,
+                "conv": pad[:, -(k - 1):].astype(cfg.dtype)}
+        raise ValueError(btype)
+
+    def scan_body(carry, pc):
+        x = carry
+        pparams, pcache = pc
+        ncs = []
+        for i, btype in enumerate(cfg.period):
+            x, nc = run_block(btype, pparams[i], pcache[i], x)
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    x, new_blocks = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    cache["blocks"] = new_blocks
+    if cfg.n_tail:
+        tail_types = cfg.block_types[cfg.n_periods * len(cfg.period):]
+        new_tail = []
+        for p_i, c_i, btype in zip(params["tail"], cache["tail"], tail_types):
+            x, nc = run_block(btype, p_i, c_i, x)
+            new_tail.append(nc)
+        cache["tail"] = tuple(new_tail)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

@@ -1,0 +1,187 @@
+"""Mamba-2 (SSD — state-space duality) layer: chunked matmul form + decode.
+
+Implements the SSD algorithm of arXiv:2405.21060 in its matmul-friendly
+chunked form (intra-chunk quadratic attention-like term + inter-chunk state
+recurrence), which is the formulation that maps onto the MXU.  Includes the
+depthwise causal conv frontend and the single-token recurrent decode step —
+O(1) per token, which is why mamba2 runs the ``long_500k`` cell.
+
+Shapes: d_inner = expand * d_model; nh = d_inner / headdim heads; state N.
+x/B/C streams follow the mamba2 grouping (ng groups shared across heads).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, dense_init
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_headdim
+    ng, ds = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = d_in + 2 * ng * ds
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * ng * ds + nh), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_ch), dtype=dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), jnp.float32),   # gated RMSNorm
+        "out_proj": dense_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def _split_streams(zxbcdt, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    ng, ds = cfg.ssm_groups, cfg.ssm_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * ng * ds], axis=-1)
+    return z, xBC, dt  # dt: (..., nh)
+
+
+def _causal_conv(xBC, conv_w, conv_state=None):
+    """Depthwise causal conv along S.  xBC: (B, S, C); conv_w: (K, C).
+    With ``conv_state`` ((B, K-1, C)) performs the streaming update instead
+    and returns (out, new_state)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(k))
+        return jax.nn.silu(out)
+    window = jnp.concatenate([conv_state, xBC], axis=1)   # (B, K, C), S==1
+    out = sum(window[:, i:i + 1] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular pairwise sums
+    L[i, j] = sum_{j < t <= i} x_t (i >= j)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD forward (training/prefill).
+
+    x: (b, S, nh, hd); dt: (b, S, nh) (softplus'd, >0); A: (nh,) negative;
+    B, C: (b, S, ng, ds); D: (nh,).  Returns (y, final_state (b, nh, hd, ds)).
+    """
+    b, s, nh, hd = x.shape
+    ng, ds = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = nh // ng
+    xc = x.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    Bc = B.reshape(b, nc, chunk, ng, ds)
+    Cc = C.reshape(b, nc, chunk, ng, ds)
+    dA = dtc * A  # (b, nc, Q, nh)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))           # (b,nc,nh,Q,Q)
+    scores = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)        # (b,nc,ng,Q,Q)
+    scores = jnp.repeat(scores, rep, axis=2)                  # (b,nc,nh,Q,Q)
+    gated = scores * L
+    y_intra = jnp.einsum("bchqs,bcsh,bcshp->bcqhp", gated, dtc, xc)
+
+    # chunk-local final states
+    dA_cum = jnp.cumsum(dA, axis=2)                          # (b,nc,Q,nh)
+    dA_tot = dA_cum[:, :, -1]                                # (b,nc,nh)
+    decay_out = jnp.exp(dA_tot[:, :, None, :] - dA_cum)      # (b,nc,Q,nh)
+    Brep = jnp.repeat(Bc, rep, axis=3)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Brep, decay_out, dtc, xc)            # (b,nc,nh,hd,ds)
+
+    # inter-chunk recurrence (scan over chunks)
+    def chunk_scan(carry, inp):
+        st_prev = carry
+        st_local, tot = inp
+        st = st_prev * jnp.exp(tot)[:, :, None, None] + st_local
+        return st, st_prev
+
+    init = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        chunk_scan, init,
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dA_tot, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (b,nc,nh,hd,ds)
+
+    # inter-chunk contribution
+    Crep = jnp.repeat(Cc, rep, axis=3)
+    decay_in = jnp.exp(dA_cum)                               # (b,nc,Q,nh)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Crep, decay_in, prev_states.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + x * D[None, None, :, None]
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """One-token recurrence. state: (b, nh, hd, ds); x: (b, nh, hd);
+    dt: (b, nh); B, C: (b, ng, ds). Returns (y (b, nh, hd), new_state)."""
+    nh = x.shape[1]
+    ng = B.shape[1]
+    rep = nh // ng
+    Br = jnp.repeat(B, rep, axis=1)                          # (b, nh, ds)
+    Cr = jnp.repeat(C, rep, axis=1)
+    da = jnp.exp(dt * A)                                     # (b, nh)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x, Br)
+    new_state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cr) + x * D[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_layer(params, x, cfg, *, conv_state=None, ssm_state=None,
+                 quantize_w=None):
+    """Full mamba2 block. Train/prefill: conv_state/ssm_state None ->
+    (y, (conv_state, ssm_state)).  Decode: S==1 with states provided."""
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    ng, ds = cfg.ssm_groups, cfg.ssm_state
+    w_in, w_out = params["in_proj"], params["out_proj"]
+    if quantize_w is not None:
+        w_in, w_out = quantize_w(w_in), quantize_w(w_out)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, w_in)
+    z, xBC, dt = _split_streams(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decode = ssm_state is not None
+    if decode:
+        xBC, conv_state = _causal_conv(xBC, params["conv_w"], conv_state)
+    else:
+        xBC = _causal_conv(xBC, params["conv_w"])
+    xs, B, C = jnp.split(xBC, [d_in, d_in + ng * ds], axis=-1)
+    b, s = xs.shape[0], xs.shape[1]
+    xh = xs.reshape(b, s, nh, cfg.ssm_headdim)
+    Bh = B.reshape(b, s, ng, ds)
+    Ch = C.reshape(b, s, ng, ds)
+    if decode:
+        y, ssm_state = ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0], params["D"])
+        y = y[:, None]
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, A, Bh, Ch, params["D"],
+                                   min(cfg.ssm_chunk, s))
+    y = y.reshape(b, s, d_in)
+    # gated RMSNorm (norm(y) * silu(z)) then out projection
+    from .common import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, w_out)
+    return out, (conv_state, ssm_state)
+
+
+def init_mamba2_state(cfg, batch, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_headdim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return (jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype),
+            jnp.zeros((batch, nh, cfg.ssm_headdim, cfg.ssm_state), jnp.float32))

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, make_schedule
+from .compression import compress_grads, decompress_grads, error_feedback_update

@@ -1,0 +1,114 @@
+"""AdamW with fp32 master weights, global-norm clipping and LR schedules.
+
+Hand-rolled (no optax in this container) but production-shaped: the
+optimizer state is a plain pytree ``{"step", "mu", "nu", "master"}`` that
+shards exactly like the parameters (FSDP-friendly — every leaf has the same
+shape as its param), so the launcher can reuse the param sharding rules.
+
+``master`` holds fp32 copies when the model params are lower precision
+(bf16); updates are computed in fp32 and cast back — the standard
+mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"   # cosine | linear | constant
+    min_lr_ratio: float = 0.1
+
+
+def make_schedule(cfg: AdamWConfig):
+    """step (int32 scalar) -> lr (f32 scalar); warmup + decay."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        t = jnp.clip((step - cfg.warmup_steps)
+                     / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "linear":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * (1 - t)
+        else:
+            decay = 1.0
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def adamw_init(params, dtype=jnp.float32, keep_master: bool = True):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": zeros,
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params),
+    }
+    if keep_master:
+        # copy=True: an fp32 param leaf must not ALIAS its master copy
+        # (donating both to the jitted step would donate one buffer twice)
+        state["master"] = jax.tree.map(
+            lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    return state
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """Returns (new_params, new_state, metrics). All math in fp32."""
+    step = state["step"] + 1
+    if lr is None:
+        lr = make_schedule(cfg)(step)
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                      state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    master = state.get("master")
+    ref = master if master is not None else params
+
+    def upd(p, m, v):
+        p32 = p.astype(jnp.float32)
+        step_v = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        # decoupled weight decay on matrices only (ndim >= 2, standard)
+        wd = cfg.weight_decay * p32 if p.ndim >= 2 else 0.0
+        return p32 - lr * (step_v + wd)
+
+    new_master = jax.tree.map(upd, ref, mu, nu)
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                              new_master, params)
+    new_state = {"step": step, "mu": mu, "nu": nu}
+    if master is not None:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_params, new_state, metrics

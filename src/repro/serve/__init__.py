@@ -1,0 +1,2 @@
+from .engine import ServeConfig, ServingEngine
+from .distributed import distributed_decode_attention, make_distributed_decode_step

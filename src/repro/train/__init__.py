@@ -1,0 +1,2 @@
+from .step import TrainState, make_train_step, init_train_state
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,86 @@
+"""Train-step factory: loss -> grads -> (optional posit wire compression)
+-> AdamW -> new state.  TC-aware: the TCPolicy enters the forward through
+``loss_fn`` (fake-quant on weights per role/layer/node) and, when
+``policy.grad_wire`` is set, the data-parallel gradient payload is posit-
+compressed with error feedback before the (XLA-inserted) all-reduce.
+
+The returned step is a pure function suitable for ``jax.jit`` with explicit
+in/out shardings — the launcher and the multi-pod dry-run both consume it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.transprecision import BF16, TCPolicy
+from ..models import lm
+from ..optim import adamw_init, adamw_update, AdamWConfig
+from ..optim.compression import error_feedback_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    """Pytree of everything a restart needs (params live separately)."""
+    params: Any
+    opt: Any
+    ef_residual: Optional[Any] = None   # error-feedback state (grad_wire)
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.ef_residual), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def init_train_state(key, cfg: lm.ModelCfg, opt_cfg: AdamWConfig,
+                     policy: TCPolicy = BF16, abstract: bool = False):
+    def build(key):
+        params = lm.init_params(key, cfg)
+        opt = adamw_init(params)
+        ef = None
+        if policy.grad_wire:
+            ef = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return TrainState(params, opt, ef)
+    if abstract:
+        return jax.eval_shape(build, key)
+    return build(key)
+
+
+def make_train_step(cfg: lm.ModelCfg, opt_cfg: AdamWConfig,
+                    policy: TCPolicy = BF16):
+    """Returns step(state, batch) -> (state, metrics)."""
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        def loss(p):
+            return lm.loss_fn(p, batch, cfg, policy)
+
+        (loss_val, parts), grads = jax.value_and_grad(loss, has_aux=True)(
+            state.params)
+
+        ef = state.ef_residual
+        if policy.grad_wire:
+            grads, ef = error_feedback_update(grads, ef, policy.grad_wire)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = {"loss": loss_val, **parts, **opt_metrics}
+        return TrainState(new_params, new_opt, ef), metrics
+
+    return step
+
+
+def state_specs(cfg: lm.ModelCfg, pspecs, policy: TCPolicy = BF16):
+    """TrainState PartitionSpecs mirroring param specs (FSDP-consistent)."""
+    from ..launch.mesh import opt_specs
+    from jax.sharding import PartitionSpec as P
+    opt = opt_specs(pspecs)
+    ef = pspecs if policy.grad_wire else None
+    return TrainState(pspecs, opt, ef)

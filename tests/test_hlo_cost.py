@@ -1,0 +1,102 @@
+"""Loop-aware HLO cost parser: correctness against XLA's own cost analysis
+on loop-free modules, and scan==unrolled invariance (the property that
+justifies using it for the scanned production programs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_loop_free_matches_cost_analysis():
+    def f(x, w1, w2):
+        h = jnp.tanh(x @ w1)
+        return jnp.sum((h @ w2) ** 2)
+
+    g = jax.jit(jax.grad(f, argnums=(1, 2)))
+    s = jax.ShapeDtypeStruct
+    c = g.lower(s((512, 256), jnp.float32), s((256, 1024), jnp.float32),
+                s((1024, 128), jnp.float32)).compile()
+    mine = analyze(c.as_text())
+    ca = c.cost_analysis()
+    assert abs(mine["flops"] / ca["flops"] - 1) < 0.05
+    assert abs(mine["bytes"] / ca["bytes accessed"] - 1) < 0.25
+
+
+@pytest.mark.parametrize("n", [3, 8])
+def test_scan_equals_unrolled(n):
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def scanned(x):
+        return jax.lax.scan(body, x, None, length=n)[0]
+
+    def unrolled(x):
+        for _ in range(n):
+            x = jnp.tanh(x @ x)
+        return x
+
+    s = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    fs = analyze(_compile(scanned, s).as_text())
+    fu = analyze(_compile(unrolled, s).as_text())
+    assert abs(fs["flops"] / fu["flops"] - 1) < 0.02
+    expected = n * 2 * 128 ** 3
+    assert abs(fs["flops"] / expected - 1) < 0.02
+    assert abs(fs["bytes"] / fu["bytes"] - 1) < 0.35
+
+
+def test_nested_loops_multiply():
+    def g(x):
+        def outer(c, _):
+            def inner(a, _):
+                return a @ c, None
+            a, _ = jax.lax.scan(inner, c, None, length=4)
+            return jnp.tanh(a), None
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    c = _compile(g, jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    r = analyze(c.as_text())
+    expected = 3 * 4 * 2 * 128 ** 3
+    assert abs(r["flops"] / expected - 1) < 0.02
+
+
+def test_collectives_counted_with_trip_multiplicity():
+    import os
+    # 8 sub-devices exist only if the test session was started that way;
+    # instead exercise via a 1-device mesh psum inside scan (still emits
+    # an all-reduce on CPU SPMD when sharded) — fall back to structure-only
+    hlo = """
+HloModule m, is_scheduled=true
+
+%body (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %p = (s32[], f32[128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128]{0} get-tuple-element(%p), index=1
+  %ar = f32[128]{0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  %c1 = s32[] constant(1)
+  %ip = s32[] add(%i, %c1)
+  ROOT %t = (s32[], f32[128]) tuple(%ip, %ar)
+}
+
+%cond (p2: (s32[], f32[128])) -> pred[] {
+  %p2 = (s32[], f32[128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> (s32[], f32[128]) {
+  %a = f32[128]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[128]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+    r = analyze(hlo)
+    assert r["collectives"]["all-reduce"]["count"] == 7
+    assert r["collectives"]["all-reduce"]["bytes"] == 7 * 128 * 4

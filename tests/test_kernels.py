@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Shape/dtype sweeps per kernel; decode/encode demand bit-exactness, matmul
+allows accumulation-order tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import posit, quant
+from repro.core.formats import POSIT8_0, POSIT8_2, POSIT16_1, POSIT16_2, PositFormat
+from repro.kernels import ref
+from repro.kernels.ops import posit_decode, posit_encode, posit_matmul, qt_matmul
+
+FMTS = [POSIT8_0, POSIT8_2, POSIT16_1, POSIT16_2]
+SHAPES = [(8, 16), (33, 65), (128, 128), (200, 72)]
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+def test_decode_kernel_bit_exact(fmt, shape):
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 1 << fmt.bits, shape).astype(fmt.np_storage_dtype)
+    got = posit_decode(codes, fmt, block=(32, 32), interpret=True)
+    want = ref.posit_decode_ref(codes, fmt)
+    nn = ~np.isnan(np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got)[nn], np.asarray(want)[nn])
+    assert np.all(np.isnan(np.asarray(got)[~nn]))
+
+
+@pytest.mark.parametrize("fmt", FMTS, ids=lambda f: f.name)
+@pytest.mark.parametrize("shape", [(16, 16), (40, 100)], ids=str)
+@pytest.mark.parametrize("dist", ["normal", "tiny", "huge"])
+def test_encode_kernel_bit_exact(fmt, shape, dist):
+    rng = np.random.default_rng(1)
+    scale = {"normal": 1.0, "tiny": 1e-8, "huge": 1e8}[dist]
+    x = (rng.normal(0, scale, shape)).astype(np.float32)
+    got = posit_encode(x, fmt, block=(32, 32), interpret=True)
+    want = ref.posit_encode_ref(x, fmt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_encode_decode_kernel_roundtrip():
+    fmt = POSIT8_2
+    codes = np.arange(256, dtype=np.uint8).reshape(16, 16)
+    vals = posit_decode(codes, fmt, interpret=True)
+    vals = jnp.nan_to_num(vals)  # NaR slot
+    back = posit_encode(vals, fmt, interpret=True)
+    expect = codes.copy().ravel()
+    expect[128] = 0  # NaR -> nan_to_num(0) -> 0
+    np.testing.assert_array_equal(np.asarray(back).ravel(), expect)
+
+
+@pytest.mark.parametrize("fmt", [POSIT8_2, POSIT16_2], ids=lambda f: f.name)
+@pytest.mark.parametrize("mnk", [(16, 16, 16), (64, 48, 32), (100, 60, 130)],
+                         ids=str)
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16], ids=str)
+def test_matmul_kernel_vs_ref(fmt, mnk, xdtype):
+    m, n, k = mnk
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), xdtype)
+    # realistic weights (encoded), not raw random codes: random posit16
+    # codes span ~1e33 of dynamic range, where accumulation *order* (not the
+    # kernel) dominates the comparison
+    w = rng.normal(0, 1, (k, n)).astype(np.float32)
+    w_codes = np.asarray(posit.encode_f32(w, fmt))
+    got = posit_matmul(x, w_codes, fmt, blocks=(32, 32, 16), interpret=True)
+    want = ref.posit_matmul_ref(x, w_codes, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_matmul_kernel_with_scale():
+    fmt = POSIT8_2
+    m, k, n = 32, 64, 24
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = rng.normal(0, 0.02, (k, n)).astype(np.float32)
+    qt = quant.quantize(w, fmt, axis=0)  # per-output-channel scale
+    got = qt_matmul(x, qt, blocks=(16, 16, 16), interpret=True)
+    want = x @ quant.dequantize(qt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+    # end-to-end quantized matmul approximates the f32 matmul
+    full = np.asarray(x @ jnp.asarray(w))
+    rel = np.linalg.norm(np.asarray(got) - full) / np.linalg.norm(full)
+    assert rel < 0.05, rel
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 80), st.integers(1, 80),
+       st.sampled_from([0, 1, 2]))
+def test_matmul_kernel_shape_property(m, n, k, es):
+    """Any (m, n, k) with any es: kernel == ref within accumulation tol."""
+    fmt = PositFormat(f"p8_{es}", 8, es=es)
+    rng = np.random.default_rng(m * 83 + n * 7 + k)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = rng.normal(0, 1, (k, n)).astype(np.float32)
+    w_codes = np.asarray(posit.encode_f32(w, fmt))
+    got = posit_matmul(x, w_codes, fmt, blocks=(32, 32, 32), interpret=True)
+    want = ref.posit_matmul_ref(x, w_codes, fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)

@@ -1,0 +1,59 @@
+"""Posit-packed serving (the paper's decode-on-read datapath at scale):
+packed weights + packed KV ring must stay functionally close to the bf16
+reference and actually shrink HBM bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quant import QuantizedTensor
+from repro.core.transprecision import BF16, SERVE_P8, SERVE_P16, pack_params
+from repro.models import lm
+from repro.models.serve_model import decode_step, init_cache
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "recurrentgemma-9b"])
+def test_packed_decode_close_to_bf16(arch):
+    cfg = get_config(arch, smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.ones((2, 1), jnp.int32)
+    l0, _ = decode_step(params, init_cache(cfg, 2, 16), tok, cfg, BF16)
+
+    pp = pack_params(params, SERVE_P16)
+    cache = init_cache(cfg, 2, 16, policy=SERVE_P16)
+    l1, c1 = decode_step(pp, cache, tok, cfg, SERVE_P16)
+    corr = np.corrcoef(np.asarray(l0, np.float32).ravel(),
+                       np.asarray(l1, np.float32).ravel())[0, 1]
+    assert corr > 0.99, corr
+    # ring stays packed across steps
+    for _ in range(3):
+        l1, c1 = decode_step(pp, c1, tok, cfg, SERVE_P16)
+    assert np.isfinite(np.asarray(l1, np.float32)).all()
+
+
+def test_packed_weights_shrink_storage():
+    cfg = get_config("llama3-8b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    pp = pack_params(params, SERVE_P8)
+    qts = [l for l in jax.tree_util.tree_leaves(
+        pp, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor)]
+    assert qts, "no leaves were packed"
+    for qt in qts:
+        assert qt.data.dtype == jnp.uint8
+    # packed KV ring dtype
+    cache = init_cache(cfg, 2, 16, policy=SERVE_P8)
+    assert cache["blocks"][0]["k"].dtype == jnp.uint8
+
+
+def test_packed_roundtrip_error_bounded():
+    """posit8 with per-channel pow2 scale: rel err per weight < 10%
+    on N(0, 0.05)-scaled weights (tapered precision centred by scale)."""
+    from repro.core.quant import quantize, dequantize
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 0.05, jnp.float32)
+    qt = quantize(w, "posit8_2", axis=0)
+    back = dequantize(qt)
+    rel = np.abs(np.asarray(back) - np.asarray(w)) / (np.abs(w) + 1e-3)
+    assert float(np.median(rel)) < 0.1

@@ -1,0 +1,280 @@
+"""Posit codec + arithmetic: vectorized JAX vs exact Python-integer oracle.
+
+Exhaustive where tractable (all 8-bit codes & pairs; all 16-bit codes),
+hypothesis property sweeps elsewhere.  Also pins the paper's worked examples.
+"""
+import numpy as np
+import pytest
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import posit, posit_ref
+from repro.core.formats import (
+    POSIT8_0, POSIT8_1, POSIT8_2, POSIT16_0, POSIT16_1, POSIT16_2, POSIT32_2,
+    PositFormat,
+)
+
+SMALL_FMTS = [POSIT8_0, POSIT8_1, POSIT8_2, POSIT16_0, POSIT16_1, POSIT16_2]
+F8 = [POSIT8_0, POSIT8_1, POSIT8_2]
+
+
+# ---------------------------------------------------------------------------
+# Paper worked examples
+# ---------------------------------------------------------------------------
+
+def test_paper_example_encode_00024():
+    """§II: 0.00024 encodes to P(8,2) = 0 0001 00 0 (= 0x08), err ~1.6%."""
+    code = posit_ref.encode(0.00024, 8, 2)
+    assert code == 0b00001000
+    val = posit_ref.to_float(code, 8, 2)
+    assert abs(val - 0.00024) / 0.00024 < 0.02
+    # vectorized agrees
+    jcode = posit.encode_f32(jnp.float32(0.00024), POSIT8_2)
+    assert int(jcode) == 0b00001000
+
+
+def test_paper_example_decode_01110100():
+    """§III-C: P(8,2)=01110100 has K=2; value = useed^2 * 2^E * 1.F."""
+    s, K, E, f_len, F = posit_ref.decode_fields(0b01110100, 8, 2)
+    assert (s, K) == (0, 2)
+    assert E == 2 and F == 0  # E bits "10" after the regime+stop
+    assert posit_ref.to_float(0b01110100, 8, 2) == 2.0 ** (4 * 2 + 2)
+    # thermometer vector: exactly r=3 ones (paper's V for this operand)
+    v, r, k = posit.thermometer_decode(jnp.uint8(0b01110100), POSIT8_2)
+    assert int(r) == 3 and int(k) == 2
+    assert np.asarray(v).sum() == 3
+
+
+def test_fp8_underflow_contrast():
+    """§II: 0.00024 underflows to 0 in 8-bit FP (e4m3) but not in P(8,2)."""
+    fp8 = np.float32(jnp.float8_e4m3fn(0.00024).astype(jnp.float32))
+    assert fp8 == 0.0
+    assert posit_ref.to_float(posit_ref.encode(0.00024, 8, 2), 8, 2) != 0.0
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", SMALL_FMTS, ids=lambda f: f.name)
+def test_oracle_roundtrip_and_monotone(fmt):
+    n, es = fmt.bits, fmt.es
+    vals = posit_ref.all_values(n, es)
+    # codes as signed ints sort identically to their real values (posit
+    # ordering property) — NaR excluded
+    codes = np.arange(1 << n, dtype=np.uint64)
+    signed = codes.astype(np.int64)
+    signed[signed >= (1 << (n - 1))] -= 1 << n
+    ok = ~np.isnan(vals)
+    order = np.argsort(signed[ok], kind="stable")
+    assert np.all(np.diff(vals[ok][order]) > 0)
+    # encode(decode(c)) == c for every code
+    for c in range(1 << n):
+        if np.isnan(vals[c]):
+            continue
+        assert posit_ref.encode(vals[c], n, es) == c, (c, vals[c])
+
+
+def test_oracle_rne_bitspace_ties_p8():
+    """Bit-level RNE (softposit semantics): the tie point between adjacent
+    codes (c, c+1) is the value of the extended bit string `c·2 + 1` read as a
+    P(n+1, es) posit.  Ties go to the even code; either side resolves to the
+    adjacent code."""
+    n, es = 8, 2
+    for c in list(range(1, 127)) + list(range(129, 255)):
+        tie = posit_ref.to_fraction(((c << 1) | 1) & 0x1FF, n + 1, es)
+        got = posit_ref.encode_fraction(tie, n, es)
+        lo_c, hi_c = c, (c + 1) & 0xFF
+        assert got in (lo_c, hi_c), (c, got)
+        assert got % 2 == 0, c  # ties to even code
+        lo = posit_ref.to_fraction(lo_c, n, es)
+        hi = posit_ref.to_fraction(hi_c, n, es)
+        eps = abs(hi - lo) / 4096
+        # signed-code order: lo_c < tie < hi_c in value
+        assert posit_ref.encode_fraction(tie - eps, n, es) == min(lo_c, hi_c, key=lambda k: posit_ref.to_fraction(k, n, es))
+        assert posit_ref.encode_fraction(tie + eps, n, es) == max(lo_c, hi_c, key=lambda k: posit_ref.to_fraction(k, n, es))
+
+
+def test_oracle_saturation():
+    n, es = 8, 2
+    mx = posit_ref.maxpos(n, es)
+    mn = posit_ref.minpos(n, es)
+    assert posit_ref.encode_fraction(mx * 1000, n, es) == 0x7F
+    assert posit_ref.encode_fraction(mn / 1000, n, es) == 0x01
+    assert posit_ref.encode_fraction(-mx * 1000, n, es) == 0x81
+    assert posit_ref.encode(float("inf"), n, es) == 0x80
+    assert posit_ref.encode(float("nan"), n, es) == 0x80
+
+
+# ---------------------------------------------------------------------------
+# Vectorized codec vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", SMALL_FMTS, ids=lambda f: f.name)
+def test_decode_matches_oracle_exhaustive(fmt):
+    n, es = fmt.bits, fmt.es
+    codes = np.arange(1 << n, dtype=fmt.np_storage_dtype)
+    got = np.asarray(posit.decode_to_f32_jit(codes, fmt), dtype=np.float64)
+    want = posit_ref.all_values(n, es)  # exact in f64; values fit f32 for n<=16
+    np.testing.assert_array_equal(got[~np.isnan(want)], want[~np.isnan(want)])
+    assert np.isnan(got[posit_ref.nar_code(n)])
+
+
+@pytest.mark.parametrize("fmt", SMALL_FMTS, ids=lambda f: f.name)
+def test_encode_roundtrip_exhaustive(fmt):
+    codes = np.arange(1 << fmt.bits, dtype=fmt.np_storage_dtype)
+    vals = posit.decode_to_f32_jit(codes, fmt)
+    back = np.asarray(posit.encode_f32_jit(vals, fmt))
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_encode_f32_random_matches_oracle():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.normal(0, 1, 2000), rng.normal(0, 1e-6, 2000),
+        rng.normal(0, 1e6, 2000), np.array([0.0, 1.0, -1.0, 0.5, 3.14159]),
+    ]).astype(np.float32)
+    for fmt in [POSIT8_2, POSIT16_2, POSIT16_0, POSIT32_2]:
+        got = np.asarray(posit.encode_f32_jit(x, fmt))
+        want = np.array([posit_ref.encode(float(v), fmt.bits, fmt.es) for v in x],
+                        dtype=fmt.np_storage_dtype)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_decode32_rne_to_f32():
+    """P(32,2) decode to f32 must equal f32(np rounding of the exact value)."""
+    rng = np.random.default_rng(1)
+    codes = rng.integers(0, 1 << 32, 4000, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(posit.decode_to_f32_jit(codes, POSIT32_2))
+    want = np.array([posit_ref.to_float(int(c), 32, 2) for c in codes],
+                    dtype=np.float64).astype(np.float32)
+    nn = ~np.isnan(want)
+    np.testing.assert_array_equal(got[nn], want[nn])
+
+
+@pytest.mark.parametrize("fmt", F8, ids=lambda f: f.name)
+def test_thermometer_equals_lut_decode(fmt):
+    """Alg-1 fidelity: LUT[popcount(V)] == regime K for every code (lead=1
+    plane; the complement plane via T transform), proving the paper's LUT
+    degenerates to popcount."""
+    n = fmt.bits
+    codes = np.arange(1 << n, dtype=fmt.np_storage_dtype)
+    v, r, k = posit.thermometer_decode(codes, fmt)
+    v, r, k = (np.asarray(x).astype(np.int64) for x in (v, r, k))
+    # thermometer property: V is monotone (no 0 after a 1, scanning i up)
+    assert np.all(np.diff(v.astype(np.int8), axis=-1) >= 0)
+    assert np.array_equal(v.sum(-1), r)
+    lut = posit.regime_lut(fmt)
+    lead = (codes >> (n - 2)) & 1
+    k_lut = np.where(lead == 1, lut[r], -r)
+    np.testing.assert_array_equal(k, k_lut)
+    # against the oracle's field decode for positive, nonzero codes
+    for c in range(1, 1 << (n - 1)):
+        _, K, *_ = posit_ref.decode_fields(c, n, fmt.es)
+        assert k[c] == K, c
+
+
+# ---------------------------------------------------------------------------
+# Exact arithmetic vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", F8, ids=lambda f: f.name)
+def test_add_mul_exhaustive_p8(fmt):
+    n, es = fmt.bits, fmt.es
+    a = np.repeat(np.arange(256, dtype=np.uint8), 256)
+    b = np.tile(np.arange(256, dtype=np.uint8), 256)
+    got_add = np.asarray(posit.add_jit(a, b, fmt))
+    got_mul = np.asarray(posit.mul_jit(a, b, fmt))
+    want_add = np.empty_like(got_add)
+    want_mul = np.empty_like(got_mul)
+    vals = [posit_ref.to_fraction(c, n, es) for c in range(256)]
+    nar = posit_ref.nar_code(n)
+    for i in range(65536):
+        va, vb = vals[a[i]], vals[b[i]]
+        if va is None or vb is None:
+            want_add[i] = want_mul[i] = nar
+        else:
+            want_add[i] = posit_ref.encode_fraction(va + vb, n, es)
+            want_mul[i] = posit_ref.encode_fraction(va * vb, n, es)
+    bad_a = np.nonzero(got_add != want_add)[0]
+    bad_m = np.nonzero(got_mul != want_mul)[0]
+    assert bad_a.size == 0, f"{bad_a.size} add mismatches, first: " + str(
+        [(hex(a[i]), hex(b[i]), hex(got_add[i]), hex(want_add[i])) for i in bad_a[:5]])
+    assert bad_m.size == 0, f"{bad_m.size} mul mismatches, first: " + str(
+        [(hex(a[i]), hex(b[i]), hex(got_mul[i]), hex(want_mul[i])) for i in bad_m[:5]])
+
+
+@settings(max_examples=300, deadline=None)
+@given(st.integers(0, 65535), st.integers(0, 65535),
+       st.sampled_from([0, 1, 2]))
+def test_add_mul_p16_hypothesis(a, b, es):
+    fmt = PositFormat(f"p16_{es}", 16, es=es)
+    n = 16
+    va = posit_ref.to_fraction(a, n, es)
+    vb = posit_ref.to_fraction(b, n, es)
+    ac = np.uint16(a)
+    bc = np.uint16(b)
+    got_add = int(posit.add(ac, bc, fmt))
+    got_mul = int(posit.mul(ac, bc, fmt))
+    if va is None or vb is None:
+        assert got_add == got_mul == posit_ref.nar_code(n)
+    else:
+        assert got_add == posit_ref.encode_fraction(va + vb, n, es)
+        assert got_mul == posit_ref.encode_fraction(va * vb, n, es)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(float(np.float32(-1e30)), float(np.float32(1e30)),
+                 allow_nan=False, width=32))
+def test_encode32_matches_oracle_hypothesis(x):
+    got = int(posit.encode_f32(jnp.float32(x), POSIT32_2))
+    want = posit_ref.encode(float(np.float32(x)), 32, 2)
+    assert got == want
+
+
+def test_sub_and_cancellation():
+    fmt = POSIT8_2
+    a = posit.encode_f32(jnp.float32(1.5), fmt)
+    assert int(posit.sub(a, a, fmt)) == 0
+    # catastrophic cancellation stays exact (1.25 and 0.25 are representable)
+    x = posit.encode_f32(jnp.float32(1.25), fmt)
+    y = posit.encode_f32(jnp.float32(1.0), fmt)
+    d = posit.sub(x, y, fmt)
+    assert float(posit.decode_to_f32(d, fmt)) == 0.25
+
+
+def test_dot_exact_small():
+    fmt = POSIT8_2
+    rng = np.random.default_rng(3)
+    a = rng.normal(0, 1, (4, 6)).astype(np.float32)
+    b = rng.normal(0, 1, (6, 5)).astype(np.float32)
+    ac = np.asarray(posit.encode_f32(a, fmt))
+    bc = np.asarray(posit.encode_f32(b, fmt))
+    got = np.asarray(posit.matmul_exact(ac, bc, fmt))
+    # oracle: sequential posit MACs in the same order
+    want = np.zeros((4, 5), dtype=np.uint8)
+    for i in range(4):
+        for j in range(5):
+            acc = 0
+            for k in range(6):
+                p = posit_ref.mul(int(ac[i, k]), int(bc[k, j]), 8, 2)
+                acc = posit_ref.add(acc, p, 8, 2)
+            want[i, j] = acc
+    np.testing.assert_array_equal(got, want)
+
+
+def test_posit_bias_extension():
+    """Exponent-biased posit (beyond-paper): decode(encode(x)) scales by 2^bias."""
+    base = POSIT8_2
+    biased = PositFormat("posit8_2_b6", 8, es=2, bias=-6)
+    x = jnp.float32(0.02)  # typical NN weight scale
+    # biased format centers tapered precision near 2^-6
+    e1 = posit.decode_to_f32(posit.encode_f32(x, base), base)
+    e2 = posit.decode_to_f32(posit.encode_f32(x, biased), biased)
+    assert abs(float(e2) - 0.02) <= abs(float(e1) - 0.02)
+    # roundtrip of representable values is exact
+    v = posit.decode_to_f32(jnp.uint8(0b01000000), biased)
+    assert int(posit.encode_f32(v, biased)) == 0b01000000

@@ -1,0 +1,136 @@
+"""Q-function semantics (Tables I/II) + TALU cycle simulator (Table III)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import posit_ref, qfunc
+from repro.core.formats import POSIT8_0, POSIT8_2, POSIT16_2
+from repro.core.talu import TABLE3, TALU, VectorUnit
+
+
+# ---------------------------------------------------------------------------
+# Table I / II rows
+# ---------------------------------------------------------------------------
+
+BYTES = np.arange(256)
+
+
+def test_q_logic_ops_exhaustive():
+    a = np.repeat(BYTES, 256)
+    b = np.tile(BYTES, 256)
+    for i in range(8):
+        np.testing.assert_array_equal(qfunc.q_and(a, b, i), (a >> i) & (b >> i) & 1)
+        np.testing.assert_array_equal(qfunc.q_or(a, b, i), ((a >> i) | (b >> i)) & 1)
+        np.testing.assert_array_equal(qfunc.q_not(b, i), 1 - ((b >> i) & 1))
+        m = (1 << (i + 1)) - 1
+        np.testing.assert_array_equal(qfunc.q_comp(a, b, i), ((a & m) >= (b & m)).astype(int))
+
+
+def test_q_add_planes_exhaustive():
+    """ADD = carry plane (Table I) then sum plane (Table II): the paper's key
+    claim that both CLA carries and sums are threshold functions."""
+    a = np.repeat(BYTES, 256)
+    b = np.tile(BYTES, 256)
+    for c0 in (0, 1):
+        s, cout = qfunc.cluster_add(a, b, p=8, c0=c0)
+        np.testing.assert_array_equal(s, (a + b + c0) & 0xFF)
+        np.testing.assert_array_equal(cout, (a + b + c0) >> 8)
+
+
+def test_q_xor_two_step_exhaustive():
+    a = np.repeat(BYTES, 256)
+    b = np.tile(BYTES, 256)
+    np.testing.assert_array_equal(qfunc.cluster_xor(a, b, p=8), a ^ b)
+
+
+def test_q_posit_decode_row():
+    """Table I posit-decode row: V_i thermometer for the paper's example."""
+    t_val = 0b1110100  # P(8,2) = 01110100, body
+    v = [int(qfunc.q_posit_decode_compare(t_val, i, p=8)) for i in range(7)]
+    assert sum(v) == 3  # regime run length -> K = 2
+    assert v == [0, 0, 0, 0, 1, 1, 1]  # V_0..V_6 (thermometer)
+
+
+# ---------------------------------------------------------------------------
+# TALU programs: bit accuracy
+# ---------------------------------------------------------------------------
+
+def test_talu_int_mul_accurate():
+    t = TALU()
+    rng = np.random.default_rng(0)
+    for bits in (4, 8, 16):
+        for _ in range(20):
+            a = int(rng.integers(0, 1 << bits))
+            b = int(rng.integers(0, 1 << bits))
+            assert t.int_mul(a, b, bits=bits) == a * b
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_talu_posit_ops_match_oracle(a, b):
+    t = TALU()
+    fmt = POSIT8_2
+    got_m = t.posit_mul(a, b, fmt)
+    got_a = t.posit_add(a, b, fmt)
+    assert got_m == posit_ref.mul(a, b, 8, 2)
+    assert got_a == posit_ref.add(a, b, 8, 2)
+
+
+# ---------------------------------------------------------------------------
+# Cycle counts (Table III)
+# ---------------------------------------------------------------------------
+
+def test_decode_cycles_exact():
+    t = TALU()
+    assert t.measure("posit_decode", POSIT8_0) == 2
+    assert t.measure("posit_decode", POSIT8_2) == 2
+    assert t.measure("posit_decode", POSIT16_2) == 6
+
+
+def test_int_cycles_exact():
+    t = TALU()
+    assert t.measure("int_add", bits=4) == 2      # Table III: INT4 add = 2
+    assert t.measure("int_add", bits=8) == 2      # INT8 add = 2
+    assert t.measure("int_add", bits=16) == 4     # INT16 add = 4
+
+
+def test_table3_reproduced_exactly():
+    """The reconstructed micro-op programs land every Table III cell."""
+    from repro.core.formats import POSIT16_0
+    t = TALU()
+    cells = [
+        ("P(8,0)", "posit_decode", POSIT8_0, None, "decode"),
+        ("P(8,2)", "posit_decode", POSIT8_2, None, "decode"),
+        ("P(16,0)", "posit_decode", POSIT16_0, None, "decode"),
+        ("P(16,2)", "posit_decode", POSIT16_2, None, "decode"),
+        ("P(8,0)", "posit_mul", POSIT8_0, None, "mul"),
+        ("P(8,2)", "posit_mul", POSIT8_2, None, "mul"),
+        ("P(16,0)", "posit_mul", POSIT16_0, None, "mul"),
+        ("P(16,2)", "posit_mul", POSIT16_2, None, "mul"),
+        ("P(8,0)", "posit_add", POSIT8_0, None, "add"),
+        ("P(8,2)", "posit_add", POSIT8_2, None, "add"),
+        ("P(16,0)", "posit_add", POSIT16_0, None, "add"),
+        ("P(16,2)", "posit_add", POSIT16_2, None, "add"),
+        ("INT4", "int_mul", None, 4, "mul"),
+        ("INT8", "int_mul", None, 8, "mul"),
+        ("INT16", "int_mul", None, 16, "mul"),
+        ("INT4", "int_add", None, 4, "add"),
+        ("INT8", "int_add", None, 8, "add"),
+        ("INT16", "int_add", None, 16, "add"),
+        ("FP8", "fp_mul", None, 8, "mul"),
+        ("FP16", "fp_mul", None, 16, "mul"),
+        ("FP8", "fp_add", None, 8, "add"),
+        ("FP16", "fp_add", None, 16, "add"),
+    ]
+    for cfg, kind, fmt, bits, op in cells:
+        ours = t.measure(kind, fmt=fmt, bits=bits or 8)
+        assert ours == TABLE3[(cfg, op)], (cfg, op, ours, TABLE3[(cfg, op)])
+
+
+def test_vector_unit_lockstep():
+    v = VectorUnit()
+    # one wave: 128 elements at 19 cycles each op
+    assert v.vector_op_cycles(19, 128) == 19
+    assert v.vector_op_cycles(19, 129) == 38
+    # 3x3 matmul = 27 MACs -> one wave of muls + one wave of adds
+    assert v.matmul_cycles(3, 3, 3, 19, 23) == 19 + 23
