@@ -1,0 +1,134 @@
+"""KV-cache transprecision benchmark: HBM footprint, decode-step time and
+accuracy deltas per ``kv_format`` across batch x context grids.
+
+Default footprint shape is serving-realistic (head_dim = 64); per K/V
+element (codes + amortized per-row f32 scale) that gives
+
+    f32     4.00 B
+    bf16    2.00 B   (baseline)
+    posit16 2.06 B   (0.52x the f32 cache; same width as bf16 + scales)
+    posit8  1.06 B   (0.53x bf16 / 0.27x f32; 8-bit information floor)
+    posit4  0.56 B   (nibble-packed: 0.28x, <= 0.3x the bf16 baseline)
+
+Timings on this container are CPU reference numbers (labelled as such;
+the Pallas kernels target TPU); the accuracy section runs the real
+``ServingEngine`` greedy loop per format against the f32 cache on the
+quickstart-style prompt set.
+
+  PYTHONPATH=src python -m benchmarks.run kv_cache
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.transprecision import KV_FORMATS
+from repro.models import lm
+from repro.models.serve_model import decode_step, init_cache
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+FORMATS = ("f32", "bf16", "posit16", "posit8", "posit4")
+# default footprint shape: (batch, context) grid x serving-like heads
+GRID = ((1, 128), (4, 512), (16, 2048))
+NKV, HD = 4, 64
+DEFAULT_SHAPE = (4, 512)
+
+
+def cache_bytes(batch: int, ctx: int, kv_format: str) -> int:
+    """Exact K+V ring bytes for one attention layer at (batch, ctx)."""
+    spec = KV_FORMATS[kv_format]
+    n = batch * ctx * NKV
+    if spec.is_posit:
+        code_ch = HD // 2 if spec.packed else HD
+        per = code_ch * jnp.dtype(spec.fmt.storage_dtype).itemsize + 4  # +scale
+    else:
+        per = HD * jnp.dtype(spec.dtype).itemsize
+    return 2 * n * per
+
+
+def _engine(cfg, params, kv_format, max_len=64):
+    return ServingEngine(cfg, params,
+                         ServeConfig(max_batch=2, max_len=max_len,
+                                     kv_format=kv_format))
+
+
+def run():
+    out = {"hbm_bytes": {}, "ratio_vs_bf16": {}, "ratio_vs_f32": {},
+           "cpu_reference_decode_us": {}, "accuracy": {}}
+
+    # --- footprint across the batch x context grid --------------------
+    for b, ctx in GRID:
+        for f in FORMATS:
+            out["hbm_bytes"][f"{f}_b{b}_ctx{ctx}"] = cache_bytes(b, ctx, f)
+    b, ctx = DEFAULT_SHAPE
+    bf16 = cache_bytes(b, ctx, "bf16")
+    f32 = cache_bytes(b, ctx, "f32")
+    for f in FORMATS:
+        cb = cache_bytes(b, ctx, f)
+        out["ratio_vs_bf16"][f] = round(cb / bf16, 4)
+        out["ratio_vs_f32"][f] = round(cb / f32, 4)
+
+    # --- decode-step wall time (CPU reference) ------------------------
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.ones((2, 1), jnp.int32)
+    for f in FORMATS:
+        import dataclasses
+        from repro.core.transprecision import BF16
+        pol = dataclasses.replace(BF16, kv_format=f, name=f"bench_kv_{f}")
+        cache = init_cache(cfg, 2, 64, policy=pol)
+        step = jax.jit(lambda p, c, t, pol=pol: decode_step(p, c, t, cfg,
+                                                            pol))
+        logits, cache = step(params, cache, tok)       # compile + warm
+        jax.block_until_ready(logits)
+        t0 = time.time()
+        for _ in range(5):
+            logits, cache = step(params, cache, tok)
+        jax.block_until_ready(logits)
+        out["cpu_reference_decode_us"][f] = (time.time() - t0) / 5 * 1e6
+
+    # --- accuracy deltas: engine greedy loop vs the f32 cache ---------
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 12)))
+               for _ in range(4)]
+
+    def serve(f):
+        eng = _engine(cfg, params, f)
+        reqs = [Request(uid=i, prompt=p, max_new=8)
+                for i, p in enumerate(prompts)]
+        eng.serve(reqs)
+        return [r.out_tokens for r in reqs]
+
+    ref_toks = serve("f32")
+    for f in FORMATS:
+        toks = ref_toks if f == "f32" else serve(f)
+        flat_a = [t for seq in toks for t in seq]
+        flat_b = [t for seq in ref_toks for t in seq]
+        match = float(np.mean([a == b for a, b in zip(flat_a, flat_b)]))
+        out["accuracy"][f] = {"greedy_match_vs_f32": round(match, 4)}
+    return out
+
+
+def main(verbose=True):
+    out = run()
+    if verbose:
+        b, ctx = DEFAULT_SHAPE
+        print(f"== KV-cache transprecision (default shape: batch={b}, "
+              f"ctx={ctx}, nkv={NKV}, hd={HD}; per attention layer) ==")
+        print(f"{'format':>8s} {'bytes':>12s} {'vs bf16':>8s} {'vs f32':>8s}"
+              f" {'decode us (CPU ref)':>20s} {'greedy==f32':>12s}")
+        for f in FORMATS:
+            print(f"{f:>8s} {out['hbm_bytes'][f'{f}_b{b}_ctx{ctx}']:>12d} "
+                  f"{out['ratio_vs_bf16'][f]:>8.3f} "
+                  f"{out['ratio_vs_f32'][f]:>8.3f} "
+                  f"{out['cpu_reference_decode_us'][f]:>20.0f} "
+                  f"{out['accuracy'][f]['greedy_match_vs_f32']:>12.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

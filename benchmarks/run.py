@@ -31,13 +31,15 @@ def _entry(name):
         from . import roofline as m
     elif name == "kernels":
         from . import bench_kernels as m
+    elif name == "kv_cache":
+        from . import bench_kv_cache as m
     else:
         raise KeyError(name)
     return m
 
 
 ALL = ("table3", "table4", "table5", "table6", "accuracy", "kernels",
-       "roofline")
+       "kv_cache", "roofline")
 
 
 def main():

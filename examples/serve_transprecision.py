@@ -46,6 +46,27 @@ def main():
     print("runtime policy switching: OK (three jit specializations, "
           "no recompilation of unrelated variants)")
 
+    # --- posit-packed KV cache (decode-on-read, PR 1) ------------------
+    # Same bf16 weights, but the KV ring holds posit codes + per-row pow2
+    # scales; posit16 reproduces the f32-cache greedy outputs at ~half the
+    # cache footprint, posit8 at a quarter.
+    print("\nKV-cache transprecision (bf16 weights, packed K/V ring):")
+    kv_out = {}
+    for kvf in ("f32", "posit16", "posit8"):
+        engine = ServingEngine(cfg, params,
+                               ServeConfig(max_batch=3, max_len=96,
+                                           kv_format=kvf),
+                               policy=get_policy("bf16"))
+        reqs = [Request(uid=i, prompt=p, max_new=12)
+                for i, p in enumerate(prompts)]
+        stats = engine.serve(reqs)
+        kv_out[kvf] = [r.out_tokens for r in reqs]
+        print(f"  kv_format={kvf:8s} cache={stats['kv_cache_bytes']:7d} B "
+              f"tokens/s={stats['tok_per_s']:8.1f}")
+    match16 = np.mean([a == b for a, b in
+                       zip(kv_out["posit16"], kv_out["f32"])])
+    print(f"  greedy agreement posit16-KV vs f32-KV: {match16:.2f}")
+
 
 if __name__ == "__main__":
     main()

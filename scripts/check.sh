@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verify for this repo.
+#
+#   scripts/check.sh            # full suite (includes ~5 min system tests)
+#   scripts/check.sh --smoke    # fast subset: skips tests/test_system.py
+#
+# Extra pytest args pass through, e.g. scripts/check.sh --smoke -k kv_cache
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARGS=()
+if [[ "${1:-}" == "--smoke" ]]; then
+  shift
+  ARGS+=(--ignore=tests/test_system.py)
+fi
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "${ARGS[@]}" "$@"

@@ -114,6 +114,7 @@ class FloatFormat(Format):
 # Registry (the formats TALU supports, plus native TPU compute formats).
 # ---------------------------------------------------------------------------
 
+POSIT4_1 = PositFormat("posit4_1", 4, es=1)  # sub-byte KV-cache storage
 POSIT8_0 = PositFormat("posit8_0", 8, es=0)
 POSIT8_1 = PositFormat("posit8_1", 8, es=1)
 POSIT8_2 = PositFormat("posit8_2", 8, es=2)   # the paper's DNN format
@@ -136,7 +137,7 @@ FP32 = FloatFormat("fp32", 32, exp_bits=8, man_bits=23)
 REGISTRY = {
     f.name: f
     for f in [
-        POSIT8_0, POSIT8_1, POSIT8_2, POSIT16_0, POSIT16_1, POSIT16_2,
+        POSIT4_1, POSIT8_0, POSIT8_1, POSIT8_2, POSIT16_0, POSIT16_1, POSIT16_2,
         POSIT32_2, INT4, INT8, INT16, INT32, FP8_E4M3, FP8_E5M2, FP16,
         BF16, FP32,
     ]

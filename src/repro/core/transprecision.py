@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from . import quant
-from .formats import get
+from .formats import POSIT4_1, POSIT8_2, POSIT16_2, PositFormat, get
 
 ROLES = (
     "attn_weights", "mlp_weights", "embed_weights", "activations",
@@ -50,6 +50,10 @@ class TCPolicy:
     node_overrides: Tuple[Tuple[str, str], ...] = ()
     # serving: store the KV cache as packed posit codes (decode-on-read)
     packed_kv: bool = False
+    # serving KV-cache storage format: one of KV_FORMATS
+    # (f32 | bf16 | posit16 | posit8 | posit4) or None.  None defers to the
+    # legacy (packed_kv, kv_cache) pair, else full precision at model dtype.
+    kv_format: Optional[str] = None
 
     def fmt_for(self, role: str, layer: Optional[int] = None,
                 node: Optional[str] = None) -> Optional[str]:
@@ -89,6 +93,70 @@ class TCPolicy:
     def bits_for(self, role: str) -> int:
         f = getattr(self, role)
         return get(f).bits if f else 16
+
+
+# ---------------------------------------------------------------------------
+# KV-cache storage resolution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVStorage:
+    """Resolved serving KV-cache storage: a float dtype OR packed posit.
+
+    ``fmt`` set -> the cache ring holds posit codes + a per-row (token x
+    head) f32 power-of-two scale; ``packed`` nibble-packs sub-byte codes
+    two-per-byte.  ``fmt`` None -> plain float storage in ``dtype``.
+    """
+
+    name: str
+    fmt: Optional[PositFormat] = None
+    dtype_name: Optional[str] = None
+    packed: bool = False
+
+    @property
+    def is_posit(self) -> bool:
+        return self.fmt is not None
+
+    @property
+    def dtype(self):
+        return {"f32": jnp.float32, "bf16": jnp.bfloat16}[self.dtype_name]
+
+    def bytes_per_value(self, head_dim: int) -> float:
+        """HBM bytes per cached K/V element, scale overhead amortized."""
+        if self.fmt is None:
+            return {"f32": 4.0, "bf16": 2.0}[self.dtype_name]
+        itemsize = jnp.dtype(self.fmt.storage_dtype).itemsize
+        code = itemsize / 2.0 if self.packed else float(itemsize)
+        return code + 4.0 / head_dim
+
+
+KV_FORMATS = {
+    "f32": KVStorage("f32", dtype_name="f32"),
+    "bf16": KVStorage("bf16", dtype_name="bf16"),
+    "posit16": KVStorage("posit16", fmt=POSIT16_2),
+    "posit8": KVStorage("posit8", fmt=POSIT8_2),
+    "posit4": KVStorage("posit4", fmt=POSIT4_1, packed=True),
+}
+
+
+def kv_storage(policy: Optional["TCPolicy"]) -> Optional[KVStorage]:
+    """Resolve a policy's KV-cache storage; None means model-dtype floats.
+
+    Precedence: explicit ``kv_format`` > legacy ``packed_kv`` + posit
+    ``kv_cache`` role > None.
+    """
+    if policy is None:
+        return None
+    if policy.kv_format is not None:
+        if policy.kv_format not in KV_FORMATS:
+            raise KeyError(f"unknown kv_format {policy.kv_format!r}; "
+                           f"known: {sorted(KV_FORMATS)}")
+        return KV_FORMATS[policy.kv_format]
+    if policy.packed_kv and policy.kv_cache:
+        f = get(policy.kv_cache)
+        if isinstance(f, PositFormat):
+            return KVStorage(f.name, fmt=f, packed=f.bits < 8)
+    return None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Pallas TPU kernels: posit-packed KV cache for serving decode.
+
+The KV cache is the dominant HBM consumer during batched decode.  This
+module stores the attention K/V rings as posit codes with a per-row
+(token x head) power-of-two scale and keeps them packed end to end:
+
+  write path  ``kv_append``       — one token's K/V rows are scaled,
+      RNE-encoded and stored straight into the ring at ``pos % W``.  The
+      ring position is a scalar-prefetch operand, so only the written
+      (1, hd) row blocks ever move between HBM and VMEM (no full-ring
+      read-modify-write), and the cache buffers are donated via
+      ``input_output_aliases``.
+  read path   ``decode_attention`` — fused decode-on-read flash decode:
+      posit K/V tiles are decoded to f32 *in VMEM* right before the
+      online-softmax inner loop (grid innermost over KV blocks, (m, l,
+      acc) carried in VMEM scratch), mirroring the decode-in-VMEM
+      structure of ``posit_matmul``.  Full-precision K/V never
+      round-trips through HBM: HBM carries ``bits/16`` of the bf16
+      baseline (plus one f32 scale per hd-row).
+
+Sub-byte storage: P(4, 1) codes are nibble-packed two-per-byte along the
+head dim (split-half layout: byte j holds elements j and j + hd/2, so
+unpacking is a lane concatenation, not a gather).  With hd = 64 the cache
+lands at ~0.28x the bf16 footprint; posit8 at ~0.53x.
+
+Pure-jnp references (``encode_kv_rows`` / ``decode_kv_rows`` /
+``decode_attention_ref``) share the scale rule and codec with the kernel
+bodies, so the CPU serving path and the Pallas path are bit-identical on
+the cache contents.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import PositFormat
+from .posit_decode import decode_tile
+from .posit_encode import encode_tile
+
+NEG_INF = -1e30
+U32 = jnp.uint32
+
+
+# ---------------------------------------------------------------------------
+# Shared codec helpers (pure jnp, Pallas-safe: used in kernel bodies and refs)
+# ---------------------------------------------------------------------------
+
+def row_pow2_scale(x):
+    """Per-row power-of-two scale over the last axis: 2**floor(log2(mean|x|)).
+
+    Exact (exponent-bit extraction, no transcendentals) so applying and
+    removing the scale is lossless and the kernel/reference paths agree
+    bit-for-bit.  Returns shape ``x.shape[:-1] + (1,)`` float32, >= 2^-98.
+    """
+    absx = jnp.abs(x.astype(jnp.float32))
+    mean = jnp.maximum(jnp.mean(absx, axis=-1, keepdims=True), 1e-30)
+    e = (jax.lax.bitcast_convert_type(mean, jnp.int32) >> 23) & 0xFF
+    return jax.lax.bitcast_convert_type(e << 23, jnp.float32)
+
+
+def pack_nibbles(codes):
+    """(..., D) 4-bit codes (uint8, < 16) -> (..., D//2) split-half packed:
+    byte j = codes[j] | codes[j + D/2] << 4."""
+    d = codes.shape[-1]
+    lo, hi = codes[..., : d // 2], codes[..., d // 2:]
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(packed):
+    """(..., D//2) packed bytes -> (..., D) 4-bit codes (lane concat)."""
+    return jnp.concatenate([packed & 0xF, packed >> 4], axis=-1)
+
+
+def encode_kv_rows(x, fmt: PositFormat, packed: bool = False):
+    """Float rows (..., hd) -> (codes, scale (..., 1) f32).
+
+    Per-row pow2 scale centres the posit tapered-precision region on the
+    row's magnitude; codes are bit-exact RNE posit.  ``packed`` nibble-packs
+    4-bit codes (hd must be even)."""
+    scale = row_pow2_scale(x)
+    codes = encode_tile(x.astype(jnp.float32) / scale, fmt)
+    if packed:
+        codes = pack_nibbles(codes)
+    return codes, scale
+
+
+def decode_kv_rows(codes, scale, fmt: PositFormat, packed: bool = False,
+                   out_dtype=jnp.float32):
+    """Inverse of ``encode_kv_rows``; scale broadcastable over the rows."""
+    if packed:
+        codes = unpack_nibbles(codes)
+    v = decode_tile(codes, fmt, jnp.float32)
+    return (v * scale).astype(out_dtype)
+
+
+def code_channels(hd: int, fmt: PositFormat, packed: bool = False) -> int:
+    """Last-axis size of the code buffer for hd float channels."""
+    if packed:
+        assert hd % 2 == 0, "nibble packing needs an even head dim"
+        return hd // 2
+    return hd
+
+
+# ---------------------------------------------------------------------------
+# kv_append: encode-on-write ring update (Pallas)
+# ---------------------------------------------------------------------------
+
+def _append_kernel(idx_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                   kco_ref, kso_ref, vco_ref, vso_ref, *, fmt, packed):
+    del idx_ref, kc_ref, ks_ref, vc_ref, vs_ref  # position consumed by specs
+    kc, ks = encode_kv_rows(kn_ref[0, 0, 0], fmt, packed)
+    vc, vs = encode_kv_rows(vn_ref[0, 0, 0], fmt, packed)
+    kco_ref[0, 0, 0] = kc
+    vco_ref[0, 0, 0] = vc
+    kso_ref[0, 0, 0] = ks[0]
+    vso_ref[0, 0, 0] = vs[0]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "packed", "interpret"))
+def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+              fmt: PositFormat, *, packed: bool = False, interpret=None):
+    """Encode-on-write ring append.
+
+    k/v_codes: (B, W, H, Dc) posit codes; k/v_scale: (B, W, H) f32;
+    k/v_new: (B, 1, H, hd) float; pos: scalar int position (mod W applied
+    here).  Returns the four updated cache arrays (donated/aliased)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, w, h, dc = k_codes.shape
+    hd = k_new.shape[-1]
+    idx = jnp.asarray(pos, jnp.int32).reshape(1) % w
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_append_kernel, fmt=fmt, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_codes.shape, k_codes.dtype),
+            jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+            jax.ShapeDtypeStruct(v_codes.shape, v_codes.dtype),
+            jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype),
+        ],
+        # operand indices include the scalar-prefetch arg (index 0)
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+        interpret=interpret,
+    )(idx, k_new, v_new, k_codes, k_scale, v_codes, v_scale)
+
+
+def kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+                  fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle for ``kv_append`` (same codec, XLA ring write)."""
+    w = k_codes.shape[1]
+    i = jnp.asarray(pos, jnp.int32) % w
+
+    def wr(codes, scale, new):
+        c, s = encode_kv_rows(new, fmt, packed)
+        codes = jax.lax.dynamic_update_slice_in_dim(
+            codes, c.astype(codes.dtype), i, axis=1)
+        scale = jax.lax.dynamic_update_slice_in_dim(
+            scale, s[..., 0], i, axis=1)
+        return codes, scale
+
+    kc, ks = wr(k_codes, k_scale, k_new)
+    vc, vs = wr(v_codes, v_scale, v_new)
+    return kc, ks, vc, vs
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: fused decode-on-read flash decode (Pallas)
+# ---------------------------------------------------------------------------
+
+def _decode_attn_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, fmt, packed, bw, nw):
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode-on-read: posit codes -> f32 in VMEM, right before the MACs
+    k = decode_tile(unpack_nibbles(kc_ref[0]) if packed else kc_ref[0],
+                    fmt, jnp.float32) * ks_ref[0][:, None]       # (bw, hd)
+    v = decode_tile(unpack_nibbles(vc_ref[0]) if packed else vc_ref[0],
+                    fmt, jnp.float32) * vs_ref[0][:, None]
+    q = q_ref[0].astype(jnp.float32)                              # (grp, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)       # (grp, bw)
+    kpos = wi * bw + jnp.arange(bw)
+    s = jnp.where((kpos < len_ref[0])[None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_ref[...], s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(wi == nw - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "packed", "block_w",
+                                             "interpret"))
+def decode_attention(q, k_codes, k_scale, v_codes, v_scale, cache_len,
+                     fmt: PositFormat, *, packed: bool = False,
+                     block_w: int = 128, interpret=None):
+    """Fused one-token GQA attention over a posit-packed ring.
+
+    q: (B, 1, nh, hd); k/v_codes: (B, W, nkv, Dc); k/v_scale: (B, W, nkv);
+    cache_len: scalar count of valid ring entries.  Online softmax over KV
+    blocks of ``block_w`` with decode-in-VMEM.  Returns (B, 1, nh, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, w, nkv, dc = k_codes.shape
+    nh, hd = q.shape[2], q.shape[3]
+    grp = nh // nkv
+    bw = min(block_w, w)
+    pw = -w % bw
+    # relayout to (B*nkv, ...) rows; the pad region is masked by cache_len<=W
+    qg = (q.reshape(b, nkv, grp, hd) * (hd ** -0.5)).reshape(b * nkv, grp, hd)
+
+    def rows(codes, scale):
+        c = jnp.transpose(codes, (0, 2, 1, 3)).reshape(b * nkv, w, dc)
+        s = jnp.transpose(scale, (0, 2, 1)).reshape(b * nkv, w)
+        if pw:
+            c = jnp.pad(c, ((0, 0), (0, pw), (0, 0)))
+            s = jnp.pad(s, ((0, 0), (0, pw)), constant_values=1.0)
+        return c, s
+
+    kc, ks = rows(k_codes, k_scale)
+    vc, vs = rows(v_codes, v_scale)
+    nw = kc.shape[1] // bw
+    out = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, fmt=fmt, packed=packed,
+                          bw=bw, nw=nw),
+        grid=(b * nkv, nw),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, grp, hd), lambda i, wi: (i, 0, 0)),
+            pl.BlockSpec((1, bw, dc), lambda i, wi: (i, wi, 0)),
+            pl.BlockSpec((1, bw), lambda i, wi: (i, wi)),
+            pl.BlockSpec((1, bw, dc), lambda i, wi: (i, wi, 0)),
+            pl.BlockSpec((1, bw), lambda i, wi: (i, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, grp, hd), lambda i, wi: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nkv, grp, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((grp, 1), jnp.float32),
+                        pltpu.VMEM((grp, 1), jnp.float32),
+                        pltpu.VMEM((grp, hd), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(cache_len, jnp.int32).reshape(1), qg, kc, ks, vc, vs)
+    return out.reshape(b, nkv, grp, hd).reshape(b, 1, nh, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, cache_len,
+                         fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle: decode the whole ring, dense masked softmax."""
+    b, w, nkv, _ = k_codes.shape
+    nh, hd = q.shape[2], q.shape[3]
+    grp = nh // nkv
+    k = decode_kv_rows(k_codes, k_scale[..., None], fmt, packed)
+    v = decode_kv_rows(v_codes, v_scale[..., None], fmt, packed)
+    qg = q.reshape(b, 1, nkv, grp, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k)
+    s = jnp.where((jnp.arange(w) < cache_len)[None, None, None, None, :],
+                  s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return out.reshape(b, 1, nh, hd).astype(q.dtype)

@@ -64,7 +64,18 @@ def posit_matmul(x, w_codes, fmt: PositFormat, scale=None, *,
     if scale is None:
         srow = jnp.ones((1, n), jnp.float32)
     else:
-        srow = jnp.broadcast_to(jnp.asarray(scale, jnp.float32).reshape(1, -1), (1, n))
+        scale = jnp.asarray(scale, jnp.float32)
+        # a (N, 1) or other-shaped scale silently flattened by reshape(1, -1)
+        # would mis-scale every output column; accept only a scalar or a
+        # per-output-channel (N,) / (1, N) vector.
+        if scale.ndim == 0 or scale.shape in ((1,), (1, 1)):
+            srow = jnp.broadcast_to(scale.reshape(1, 1), (1, n))
+        elif scale.shape in ((n,), (1, n)):
+            srow = scale.reshape(1, n)
+        else:
+            raise ValueError(
+                f"posit_matmul scale must be a scalar or per-output-channel "
+                f"of shape ({n},) / (1, {n}); got shape {scale.shape}")
     sp = jnp.pad(srow, ((0, 0), (0, pn)))
     gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
     out = pl.pallas_call(

@@ -412,6 +412,26 @@ class HloCostModel:
         c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
 
 
+def normalize_cost_analysis(ca) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a list of per-module dicts (one per partition /
+    executable module); newer JAX returns the entry module's dict
+    directly.  Returns one flat dict, summing numeric keys across modules
+    so loop-free single-module programs are unchanged either way.
+    """
+    if isinstance(ca, dict):
+        return ca
+    out: Dict[str, float] = {}
+    for mod in ca:
+        for k, v in mod.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+            else:
+                out.setdefault(k, v)
+    return out
+
+
 def analyze(hlo_text: str) -> Dict[str, object]:
     cost = HloCostModel(hlo_text).cost()
     return {

@@ -187,8 +187,10 @@ def cache_specs(abstract_cache, cfg: ModelCfg, rules: Dict[str, Any]):
             return P()
         if name == "memory":                  # (B, enc_seq, d)
             return P(b, None, None)
-        if name in ("k", "v"):                # (B, W, nkv, hd)
+        if name in ("k", "v"):                # (B, W, nkv, hd|codes)
             return P(*lead, b, kv, None, None)
+        if name in ("k_scale", "v_scale"):    # (B, W, nkv) packed-KV scales
+            return P(*lead, b, kv, None)
         if name in ("xk", "xv"):              # (B, enc_seq, nkv, hd)
             return P(*lead, b, None, None, None)
         if name == "state":                   # (B, nh, hd, ds)

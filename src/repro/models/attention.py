@@ -261,3 +261,27 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
     return out.reshape(b, 1, nh, hd)
+
+
+def decode_attention_packed(q, k_codes, v_codes, cache_len, *, k_scale,
+                            v_scale, spec, window=None, ring_offset=None):
+    """One-token attention against a posit-packed cache (decode-on-read).
+
+    k/v_codes: (B, W, nkv, Dc) posit codes; k/v_scale: (B, W, nkv) f32
+    per-row pow2 scales; ``spec`` a ``core.transprecision.KVStorage``.  On
+    accelerators this is the fused Pallas kernel (codes decoded in VMEM
+    inside the online-softmax loop — full-precision K/V never touch HBM);
+    on CPU, a bit-identical decode + dense reference.  Decoded K/V stay
+    f32 so a posit16 cache is strictly more precise than a bf16 one.
+    """
+    from ..kernels import kv_cache as kv_kernels
+    if jax.default_backend() != "cpu":
+        return kv_kernels.decode_attention(
+            q, k_codes, k_scale, v_codes, v_scale, cache_len,
+            spec.fmt, packed=spec.packed)
+    k = kv_kernels.decode_kv_rows(k_codes, k_scale[..., None], spec.fmt,
+                                  spec.packed)
+    v = kv_kernels.decode_kv_rows(v_codes, v_scale[..., None], spec.fmt,
+                                  spec.packed)
+    return decode_attention(q, k, v, cache_len, window=window,
+                            ring_offset=ring_offset)

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.quant import maybe_dequant
-from ..core.transprecision import BF16, TCPolicy
+from ..core.transprecision import BF16, KVStorage, TCPolicy, kv_storage
+from ..kernels import kv_cache as kv_kernels
 from . import attention, rglru as rglru_mod, ssm as ssm_mod
 from .common import apply_rope, rms_norm
 from .lm import ModelCfg, _mlp, _qkv, _qw, _rope_cs, forward
@@ -34,25 +35,26 @@ def _attn_w(cfg: ModelCfg, max_len: int) -> int:
     return max_len
 
 
-def _kv_fmt(policy: TCPolicy):
-    """Packed-KV posit format if the policy stores the cache as codes."""
-    from ..core.formats import PositFormat, get
-    if policy is not None and policy.packed_kv and policy.kv_cache:
-        f = get(policy.kv_cache)
-        if isinstance(f, PositFormat):
-            return f
-    return None
+def _kv_spec(policy: TCPolicy) -> Optional[KVStorage]:
+    """Resolved KV-cache storage for ``policy`` (None = model dtype)."""
+    return kv_storage(policy)
 
 
 def init_cache(cfg: ModelCfg, batch: int, max_len: int,
                dtype=None, policy: TCPolicy = BF16) -> Dict[str, Any]:
     """Empty decode state for a batch of sequences up to max_len tokens.
 
-    With ``policy.packed_kv`` the attention K/V rings hold posit CODES
-    (uint8/16) — the decode-on-read datapath; recurrent/SSM states stay
-    full precision (they are rewritten every step)."""
-    fmt = _kv_fmt(policy)
-    dt = dtype or (fmt.storage_dtype if fmt is not None else cfg.dtype)
+    With a posit ``kv_format`` (or legacy ``packed_kv``) the attention K/V
+    rings hold posit CODES plus per-row f32 pow2 scales (``k_scale`` /
+    ``v_scale``, shape (B, W, nkv)) — the decode-on-read datapath;
+    recurrent/SSM states stay full precision (rewritten every step)."""
+    spec = _kv_spec(policy)
+    posit_kv = spec is not None and spec.is_posit
+    if posit_kv:
+        dt = dtype or cfg.dtype            # cross-K/V, memory stay float
+        kv_ch = kv_kernels.code_channels(cfg.head_dim, spec.fmt, spec.packed)
+    else:
+        dt = dtype or (spec.dtype if spec is not None else cfg.dtype)
     hd, nkv = cfg.head_dim, cfg.n_kv_heads
     w = _attn_w(cfg, max_len)
     d_in = cfg.ssm_expand * cfg.d_model
@@ -64,7 +66,13 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
             s = (stacked,) + shape if stacked else shape
             return jnp.zeros(s, dtype)
         if btype == "attn":
-            c = {"k": z((batch, w, nkv, hd)), "v": z((batch, w, nkv, hd))}
+            if posit_kv:
+                c = {"k": z((batch, w, nkv, kv_ch), spec.fmt.storage_dtype),
+                     "v": z((batch, w, nkv, kv_ch), spec.fmt.storage_dtype),
+                     "k_scale": z((batch, w, nkv), jnp.float32) + 1.0,
+                     "v_scale": z((batch, w, nkv), jnp.float32) + 1.0}
+            else:
+                c = {"k": z((batch, w, nkv, hd)), "v": z((batch, w, nkv, hd))}
             if cfg.family == "audio":
                 # cross K/V stay unpacked (written once at prefill)
                 c["xk"] = z((batch, cfg.enc_seq, nkv, hd), cfg.dtype)
@@ -97,41 +105,65 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
 # Per-block decode steps
 # ---------------------------------------------------------------------------
 
-def _ring_write(buf, val, pos, fmt=None):
-    """buf: (B, W, ...); val: (B, 1, ...); write at pos mod W.
-    With ``fmt`` the buffer holds posit codes: encode-on-write."""
-    from ..core import posit
+def _ring_write(buf, val, pos):
+    """buf: (B, W, ...); val: (B, 1, ...); write at pos mod W."""
     w = buf.shape[1]
-    if fmt is not None:
-        val = posit.encode_f32(val.astype(jnp.float32), fmt)
     return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype),
                                                pos % w, axis=1)
 
 
+def _ring_append_packed(c, kp, vp, pos, spec: KVStorage):
+    """Encode-on-write ring append for a posit-packed cache block.
+
+    Pallas ``kv_append`` on accelerators; bit-identical pure-jnp reference
+    on CPU (the kernel's interpret-mode overhead is per-layer-per-step)."""
+    args = (c["k"], c["k_scale"], c["v"], c["v_scale"],
+            kp.astype(jnp.float32), vp.astype(jnp.float32), pos)
+    if jax.default_backend() == "cpu":
+        return kv_kernels.kv_append_ref(*args, spec.fmt, spec.packed)
+    return kv_kernels.kv_append(*args, spec.fmt, packed=spec.packed)
+
+
 def _attn_decode(p, c, x, cfg, policy, pos, memory=None, attn_impl=None):
-    from ..core import posit
     b = x.shape[0]
-    fmt = _kv_fmt(policy)
+    spec = _kv_spec(policy)
+    posit_kv = spec is not None and spec.is_posit
     h = rms_norm(x, p["ln"])
     qp, kp, vp = _qkv(p, h, cfg, policy)
     posv = jnp.full((b, 1), pos) if cfg.mrope else pos[None]
     cos, sin = _rope_cs(cfg, posv)
     qp = apply_rope(qp, cos, sin)
     kp = apply_rope(kp, cos, sin)
-    k_cache = _ring_write(c["k"], kp, pos, fmt)
-    v_cache = _ring_write(c["v"], vp, pos, fmt)
-    w = k_cache.shape[1]
-    if fmt is not None:   # decode-on-read: HBM carries bits/16 of bf16
-        k_read = posit.decode_to_f32(k_cache, fmt).astype(cfg.dtype)
-        v_read = posit.decode_to_f32(v_cache, fmt).astype(cfg.dtype)
-    else:
-        k_read, v_read = k_cache, v_cache
-    attn_fn = attn_impl or attention.decode_attention
-    ao = attn_fn(qp, k_read, v_read, jnp.minimum(pos + 1, w))
-    x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, 1, -1),
-                       _qw(policy, "attn_weights")(p["wo"]))
     new_c = dict(c)
-    new_c["k"], new_c["v"] = k_cache, v_cache
+    if posit_kv:
+        kc, ks, vc, vs = _ring_append_packed(c, kp, vp, pos, spec)
+        w = kc.shape[1]
+        cl = jnp.minimum(pos + 1, w)
+        if attn_impl is not None and getattr(attn_impl, "packed_kv", False):
+            # packed protocol: codes + scales cross the impl boundary
+            ao = attn_impl(qp, kc, vc, cl, k_scale=ks, v_scale=vs,
+                           kv_spec=spec)
+        elif attn_impl is not None:
+            k_read = kv_kernels.decode_kv_rows(kc, ks[..., None], spec.fmt,
+                                               spec.packed)
+            v_read = kv_kernels.decode_kv_rows(vc, vs[..., None], spec.fmt,
+                                               spec.packed)
+            ao = attn_impl(qp, k_read, v_read, cl)
+        else:
+            ao = attention.decode_attention_packed(
+                qp, kc, vc, cl, k_scale=ks, v_scale=vs, spec=spec)
+        new_c.update(k=kc, v=vc, k_scale=ks, v_scale=vs)
+    else:
+        k_cache = _ring_write(c["k"], kp, pos)
+        v_cache = _ring_write(c["v"], vp, pos)
+        w = k_cache.shape[1]
+        attn_fn = attn_impl or attention.decode_attention
+        ao = attn_fn(qp, k_cache, v_cache, jnp.minimum(pos + 1, w))
+        new_c["k"], new_c["v"] = k_cache, v_cache
+    # attention may run at higher precision than the stream (f32-decoded
+    # K/V); the residual stream keeps the model dtype for the scan carry
+    x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, 1, -1),
+                       _qw(policy, "attn_weights")(p["wo"])).astype(x.dtype)
     if memory is not None:
         hx = rms_norm(x, p["ln_x"])
         qx = jnp.einsum("bsd,dk->bsk", hx, maybe_dequant(p["wq_x"])).reshape(
@@ -247,7 +279,9 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
         b, s = tokens.shape
         emb = policy.quantize_weight(params["embed"], "embed_weights")
         x = emb[tokens].astype(cfg.dtype)
-    cache = init_cache(cfg, b, max_len)
+    cache = init_cache(cfg, b, max_len, policy=policy)
+    spec = _kv_spec(policy)
+    posit_kv = spec is not None and spec.is_posit
     w = _attn_w(cfg, max_len)
     memory = None
     if cfg.family == "audio":
@@ -261,6 +295,16 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
 
     def fill(buf, kv):
         return buf.at[:, ring_idx].set(kv[:, start:start + length].astype(buf.dtype))
+
+    def fill_packed(nc, c_i, name, kv):
+        """Bulk encode-on-write of the prompt's K/V rows into the ring."""
+        codes, scale = kv_kernels.encode_kv_rows(
+            kv[:, start:start + length].astype(jnp.float32),
+            spec.fmt, spec.packed)
+        nc[name] = c_i[name].at[:, ring_idx].set(
+            codes.astype(c_i[name].dtype))
+        nc[name + "_scale"] = c_i[name + "_scale"].at[:, ring_idx].set(
+            scale[..., 0])
 
     def run_block(btype, p_i, c_i, x):
         if btype == "attn":
@@ -278,8 +322,12 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
             x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, s, -1),
                                _qw(policy, "attn_weights")(p_i["wo"]))
             nc = dict(c_i)
-            nc["k"] = fill(c_i["k"], kp)
-            nc["v"] = fill(c_i["v"], vp)
+            if posit_kv:
+                fill_packed(nc, c_i, "k", kp)
+                fill_packed(nc, c_i, "v", vp)
+            else:
+                nc["k"] = fill(c_i["k"], kp)
+                nc["v"] = fill(c_i["v"], vp)
             if memory is not None:
                 hx = rms_norm(x, p_i["ln_x"])
                 qx = jnp.einsum("bsd,dk->bsk", hx, p_i["wq_x"]).reshape(

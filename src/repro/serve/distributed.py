@@ -34,6 +34,20 @@ from ..models import serve_model
 from ..models.attention import NEG_INF
 
 
+def _shard_map(fn, mesh: Mesh, in_specs, out_specs, axis: str):
+    """shard_map across JAX versions: ``jax.shard_map`` (new) with manual
+    ``axis`` only, or ``jax.experimental.shard_map`` (<=0.4.x) with the
+    other mesh axes auto."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names={axis})
+    from jax.experimental.shard_map import shard_map as sm
+    auto = frozenset(set(mesh.axis_names) - {axis})
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
+
+
 def _local_lse(q, k, v, start, cache_len):
     """Partial attention over a local KV slice.
 
@@ -52,10 +66,56 @@ def _local_lse(q, k, v, start, cache_len):
     return o, l, m
 
 
-def distributed_decode_attention(mesh: Mesh, axis: str = "model"):
+def distributed_decode_attention(mesh: Mesh, axis: str = "model",
+                                 kv_spec=None):
     """Returns an ``attn_impl(q, k_cache, v_cache, cache_len)`` whose KV
-    cache is *manually* sharded along ``axis`` on its sequence dim."""
+    cache is *manually* sharded along ``axis`` on its sequence dim.
+
+    With a posit ``kv_spec`` (``core.transprecision.KVStorage``) the impl
+    speaks the packed protocol (``attn.packed_kv = True``): the wire/HBM
+    payload is posit CODES + per-row scales sharded along the sequence
+    axis — each shard decodes its slice locally right before the partial
+    LSE reduction, so full-precision K/V never cross HBM or ICI and the
+    sharded cache stays ``bits/16`` of the bf16 footprint."""
     n_shard = mesh.shape[axis]
+    if kv_spec is not None and kv_spec.is_posit:
+        from ..kernels import kv_cache as kv_kernels
+
+        def attn_packed(q, k_codes, v_codes, cache_len, *, k_scale, v_scale,
+                        **_):
+            b, w, nkv, _ = k_codes.shape
+            nh, hd = q.shape[2], q.shape[3]
+            grp = nh // nkv
+            qg = q.reshape(b, 1, nkv, grp, hd) * (hd ** -0.5)
+            cache_len = jnp.asarray(cache_len)
+
+            def shard_fn(qs, kc, ks, vc, vs, cl):
+                wl = kc.shape[1]
+                start = jax.lax.axis_index(axis) * wl
+                kf = kv_kernels.decode_kv_rows(kc, ks[..., None],
+                                               kv_spec.fmt, kv_spec.packed)
+                vf = kv_kernels.decode_kv_rows(vc, vs[..., None],
+                                               kv_spec.fmt, kv_spec.packed)
+                o, l, m = _local_lse(qs, kf, vf, start, cl)
+                m_g = jax.lax.pmax(m, axis)
+                corr = jnp.exp(m - m_g)
+                num = jax.lax.psum(o * corr[..., None], axis)
+                den = jax.lax.psum(l * corr, axis)
+                return (num / jnp.maximum(den, 1e-30)[..., None]).astype(
+                    q.dtype)
+
+            out = _shard_map(
+                shard_fn, mesh,
+                in_specs=(P(), P(None, axis, None, None),
+                          P(None, axis, None),
+                          P(None, axis, None, None),
+                          P(None, axis, None), P()),
+                out_specs=P(), axis=axis)(qg, k_codes, k_scale, v_codes,
+                                          v_scale, cache_len)
+            return out.reshape(b, 1, nh, hd)
+
+        attn_packed.packed_kv = True
+        return attn_packed
 
     def attn(q, k_cache, v_cache, cache_len, **_):
         b, w, nkv, hd = k_cache.shape
@@ -74,13 +134,11 @@ def distributed_decode_attention(mesh: Mesh, axis: str = "model"):
             den = jax.lax.psum(l * corr, axis)
             return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
 
-        out = jax.shard_map(
-            shard_fn, mesh=mesh,
+        out = _shard_map(
+            shard_fn, mesh,
             in_specs=(P(), P(None, axis, None, None),
                       P(None, axis, None, None), P()),
-            out_specs=P(),
-            check_vma=False,
-            axis_names={axis})(qg, k_cache, v_cache, cache_len)
+            out_specs=P(), axis=axis)(qg, k_cache, v_cache, cache_len)
         return out.reshape(b, 1, nh, hd)
 
     return attn
@@ -89,7 +147,9 @@ def distributed_decode_attention(mesh: Mesh, axis: str = "model"):
 def make_distributed_decode_step(cfg, policy, mesh: Mesh, rules,
                                  axis: str = "model"):
     """decode_step with the LSE-combined distributed attention plugged in."""
-    attn_impl = distributed_decode_attention(mesh, axis)
+    from ..core.transprecision import kv_storage
+    attn_impl = distributed_decode_attention(mesh, axis,
+                                             kv_spec=kv_storage(policy))
 
     def step(params, cache, tok):
         if cfg.family == "vlm":

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.transprecision import BF16, TCPolicy, get_policy
+from ..core.transprecision import BF16, TCPolicy, get_policy, kv_storage
 from ..models import lm
 from ..models.serve_model import decode_step, init_cache, prefill
 
@@ -37,6 +37,9 @@ class ServeConfig:
     temperature: float = 0.0     # 0 => greedy
     seed: int = 0
     eos_id: Optional[int] = None
+    # KV-cache storage override (f32|bf16|posit16|posit8|posit4); None
+    # keeps the policy's own kv_format / legacy packed_kv resolution.
+    kv_format: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -54,11 +57,15 @@ class ServingEngine:
         self.cfg = cfg
         self.scfg = scfg
         self.policy = get_policy(policy)
+        if scfg.kv_format is not None:
+            self.policy = dataclasses.replace(
+                self.policy, kv_format=scfg.kv_format,
+                name=f"{self.policy.name}+kv_{scfg.kv_format}")
         self.params = params
         b, L = scfg.max_batch, scfg.max_len
 
         # one shared cache; per-slot sequence positions
-        self.cache = init_cache(cfg, b, L)
+        self.cache = init_cache(cfg, b, L, policy=self.policy)
         self.slot_pos = np.zeros(b, np.int64)         # tokens generated so far
         self.slot_req: List[Optional[Request]] = [None] * b
         self.last_tok = np.zeros((b, 1), np.int32)
@@ -68,7 +75,20 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, batch: prefill(p, batch, cfg, L, self.policy))
         self._rng = np.random.default_rng(scfg.seed)
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0}
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "kv_cache_bytes": self.kv_cache_bytes()}
+
+    def kv_cache_bytes(self) -> int:
+        """HBM footprint of the attention K/V rings (codes + scales)."""
+        total = 0
+        for blocks in (self.cache.get("blocks", ()),
+                       self.cache.get("tail", ())):
+            for c in blocks:
+                for name in ("k", "v", "k_scale", "v_scale"):
+                    if name in c:
+                        a = c[name]
+                        total += int(np.prod(a.shape)) * a.dtype.itemsize
+        return total
 
     # ---- slot management ----
     def _free_slot(self) -> Optional[int]:

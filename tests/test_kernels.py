@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # offline CI: vendored deterministic fallback
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import posit, quant
 from repro.core.formats import POSIT8_0, POSIT8_2, POSIT16_1, POSIT16_2, PositFormat
@@ -87,6 +90,53 @@ def test_matmul_kernel_with_scale():
     full = np.asarray(x @ jnp.asarray(w))
     rel = np.linalg.norm(np.asarray(got) - full) / np.linalg.norm(full)
     assert rel < 0.05, rel
+
+
+@pytest.mark.parametrize("mnk", [(33, 17, 47), (65, 129, 31), (1, 200, 7)],
+                         ids=str)
+def test_matmul_kernel_padding_edges(mnk):
+    """Non-block-multiple M/N/K: the zero-padded tail must not leak into
+    the result (posit code 0 decodes to 0.0, but scale rows are padded
+    too)."""
+    m, n, k = mnk
+    fmt = POSIT8_2
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w = rng.normal(0, 1, (k, n)).astype(np.float32)
+    w_codes = np.asarray(posit.encode_f32(w, fmt))
+    scale = rng.uniform(0.5, 2.0, (n,)).astype(np.float32)
+    got = posit_matmul(x, w_codes, fmt, scale=scale, blocks=(32, 32, 32),
+                       interpret=True)
+    want = np.asarray(ref.posit_matmul_ref(x, w_codes, fmt)) * scale
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+
+
+def test_matmul_scale_shape_validation():
+    """Scalar and (N,)/(1,N) scales work; (N,1) and other shapes raise
+    instead of silently flattening into the wrong axis."""
+    fmt = POSIT8_2
+    rng = np.random.default_rng(8)
+    m, k, n = 16, 32, 24
+    x = jnp.asarray(rng.normal(0, 1, (m, k)), jnp.float32)
+    w_codes = np.asarray(
+        posit.encode_f32(rng.normal(0, 1, (k, n)).astype(np.float32), fmt))
+    base = np.asarray(posit_matmul(x, w_codes, fmt, blocks=(16, 16, 16),
+                                   interpret=True))
+    got0 = posit_matmul(x, w_codes, fmt, scale=jnp.float32(2.0),
+                        blocks=(16, 16, 16), interpret=True)  # 0-d scalar
+    np.testing.assert_allclose(np.asarray(got0), 2.0 * base, rtol=1e-6)
+    sv = jnp.asarray(rng.uniform(0.5, 2.0, (n,)), jnp.float32)
+    got1 = posit_matmul(x, w_codes, fmt, scale=sv, blocks=(16, 16, 16),
+                        interpret=True)
+    got2 = posit_matmul(x, w_codes, fmt, scale=sv.reshape(1, n),
+                        blocks=(16, 16, 16), interpret=True)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(got2), rtol=1e-6)
+    with pytest.raises(ValueError, match="scale"):
+        posit_matmul(x, w_codes, fmt, scale=sv.reshape(n, 1),
+                     blocks=(16, 16, 16), interpret=True)
+    with pytest.raises(ValueError, match="scale"):
+        posit_matmul(x, w_codes, fmt, scale=jnp.ones((n - 1,), jnp.float32),
+                     blocks=(16, 16, 16), interpret=True)
 
 
 @settings(max_examples=10, deadline=None)

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # offline CI: vendored deterministic fallback
+    from _propcheck import given, settings, strategies as st
 
 from repro.models.moe import init_moe, moe_ffn
 

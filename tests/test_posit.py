@@ -9,7 +9,10 @@ from fractions import Fraction
 
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # offline CI: vendored deterministic fallback
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import posit, posit_ref
 from repro.core.formats import (

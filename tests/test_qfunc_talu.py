@@ -1,7 +1,10 @@
 """Q-function semantics (Tables I/II) + TALU cycle simulator (Table III)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # offline CI: vendored deterministic fallback
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import posit_ref, qfunc
 from repro.core.formats import POSIT8_0, POSIT8_2, POSIT16_2
