@@ -33,13 +33,15 @@ def _entry(name):
         from . import bench_kernels as m
     elif name == "kv_cache":
         from . import bench_kv_cache as m
+    elif name == "paged_kv":
+        from . import bench_paged_kv as m
     else:
         raise KeyError(name)
     return m
 
 
 ALL = ("table3", "table4", "table5", "table6", "accuracy", "kernels",
-       "kv_cache", "roofline")
+       "kv_cache", "paged_kv", "roofline")
 
 
 def main():
@@ -70,6 +72,8 @@ def main():
             derived = f"cells={out['n_ok']}/{out['n_cells']}"
         elif name == "kernels":
             derived = f"max_err={out['max_rel_err']:.1e}"
+        elif name == "paged_kv":
+            derived = f"live/ring_p8={out['live_vs_ring']['posit8']:.2f}"
         csv.append(f"{name},{dt_us:.0f},{derived}")
         print()
     print("\n".join(csv))

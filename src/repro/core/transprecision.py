@@ -54,6 +54,14 @@ class TCPolicy:
     # (f32 | bf16 | posit16 | posit8 | posit4) or None.  None defers to the
     # legacy (packed_kv, kv_cache) pair, else full precision at model dtype.
     kv_format: Optional[str] = None
+    # serving KV-cache layout: "ring" reserves a dense max_len ring per
+    # slot; "paged" uses a shared page pool + per-sequence page tables
+    # (vLLM-style), so HBM tracks live tokens instead of the worst case.
+    kv_layout: str = "ring"
+    # tokens per page for the paged layout (static: picks the Pallas
+    # page-walk block shape, so it is a jit specialization key like the
+    # formats themselves)
+    kv_page_size: int = 16
 
     def fmt_for(self, role: str, layer: Optional[int] = None,
                 node: Optional[str] = None) -> Optional[str]:

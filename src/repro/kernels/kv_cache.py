@@ -126,13 +126,14 @@ def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
     """Encode-on-write ring append.
 
     k/v_codes: (B, W, H, Dc) posit codes; k/v_scale: (B, W, H) f32;
-    k/v_new: (B, 1, H, hd) float; pos: scalar int position (mod W applied
-    here).  Returns the four updated cache arrays (donated/aliased)."""
+    k/v_new: (B, 1, H, hd) float; pos: int position, scalar (shared) or
+    (B,) per-slot (mod W applied here).  Returns the four updated cache
+    arrays (donated/aliased)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, w, h, dc = k_codes.shape
     hd = k_new.shape[-1]
-    idx = jnp.asarray(pos, jnp.int32).reshape(1) % w
+    idx = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)) % w
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -140,16 +141,16 @@ def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
         in_specs=[
             pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
             pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[0], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[0], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
         ],
     )
     return pl.pallas_call(
@@ -169,12 +170,18 @@ def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
 
 def kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
                   fmt: PositFormat, packed: bool = False):
-    """Pure-jnp oracle for ``kv_append`` (same codec, XLA ring write)."""
-    w = k_codes.shape[1]
+    """Pure-jnp oracle for ``kv_append`` (same codec, XLA ring write).
+    ``pos`` may be a scalar (shared) or a (B,) per-slot vector."""
+    b, w = k_codes.shape[:2]
     i = jnp.asarray(pos, jnp.int32) % w
+    rows = jnp.arange(b)
 
     def wr(codes, scale, new):
         c, s = encode_kv_rows(new, fmt, packed)
+        if i.ndim:                       # per-slot ring positions
+            codes = codes.at[rows, i].set(c[:, 0].astype(codes.dtype))
+            scale = scale.at[rows, i].set(s[:, 0, :, 0])
+            return codes, scale
         codes = jax.lax.dynamic_update_slice_in_dim(
             codes, c.astype(codes.dtype), i, axis=1)
         scale = jax.lax.dynamic_update_slice_in_dim(
@@ -192,6 +199,7 @@ def kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
 
 def _decode_attn_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
                         o_ref, m_ref, l_ref, acc_ref, *, fmt, packed, bw, nw):
+    ri = pl.program_id(0)          # fused (batch x kv-head) row
     wi = pl.program_id(1)
 
     @pl.when(wi == 0)
@@ -208,7 +216,7 @@ def _decode_attn_kernel(len_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
     q = q_ref[0].astype(jnp.float32)                              # (grp, hd)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)       # (grp, bw)
     kpos = wi * bw + jnp.arange(bw)
-    s = jnp.where((kpos < len_ref[0])[None, :], s, NEG_INF)
+    s = jnp.where((kpos < len_ref[ri])[None, :], s, NEG_INF)
     m_new = jnp.maximum(m_ref[...], s.max(-1, keepdims=True))
     p = jnp.exp(s - m_new)
     corr = jnp.exp(m_ref[...] - m_new)
@@ -230,8 +238,9 @@ def decode_attention(q, k_codes, k_scale, v_codes, v_scale, cache_len,
     """Fused one-token GQA attention over a posit-packed ring.
 
     q: (B, 1, nh, hd); k/v_codes: (B, W, nkv, Dc); k/v_scale: (B, W, nkv);
-    cache_len: scalar count of valid ring entries.  Online softmax over KV
-    blocks of ``block_w`` with decode-in-VMEM.  Returns (B, 1, nh, hd)."""
+    cache_len: count of valid ring entries, scalar (shared) or (B,)
+    per-slot.  Online softmax over KV blocks of ``block_w`` with
+    decode-in-VMEM.  Returns (B, 1, nh, hd)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, w, nkv, dc = k_codes.shape
@@ -271,13 +280,15 @@ def decode_attention(q, k_codes, k_scale, v_codes, v_scale, cache_len,
                         pltpu.VMEM((grp, 1), jnp.float32),
                         pltpu.VMEM((grp, hd), jnp.float32)],
         interpret=interpret,
-    )(jnp.asarray(cache_len, jnp.int32).reshape(1), qg, kc, ks, vc, vs)
+    )(jnp.repeat(jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,)),
+                 nkv), qg, kc, ks, vc, vs)
     return out.reshape(b, nkv, grp, hd).reshape(b, 1, nh, hd).astype(q.dtype)
 
 
 def decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, cache_len,
                          fmt: PositFormat, packed: bool = False):
-    """Pure-jnp oracle: decode the whole ring, dense masked softmax."""
+    """Pure-jnp oracle: decode the whole ring, dense masked softmax.
+    ``cache_len`` scalar (shared) or (B,) per-slot."""
     b, w, nkv, _ = k_codes.shape
     nh, hd = q.shape[2], q.shape[3]
     grp = nh // nkv
@@ -285,8 +296,9 @@ def decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale, cache_len,
     v = decode_kv_rows(v_codes, v_scale[..., None], fmt, packed)
     qg = q.reshape(b, 1, nkv, grp, hd).astype(jnp.float32) * (hd ** -0.5)
     s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k)
-    s = jnp.where((jnp.arange(w) < cache_len)[None, None, None, None, :],
-                  s, NEG_INF)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    s = jnp.where((jnp.arange(w)[None, :] < cl[:, None])
+                  [:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
     return out.reshape(b, 1, nh, hd).astype(q.dtype)

@@ -1,0 +1,280 @@
+"""Pallas TPU kernels: vLLM-style paged posit KV cache.
+
+The ring cache (``kernels/kv_cache.py``) reserves a dense ``max_len`` ring
+per slot, so HBM scales with the worst case.  This module replaces the
+per-slot ring with a shared *page pool* plus per-sequence page tables —
+the paging indirection the ROADMAP names as the next step after PR 1 —
+while keeping the posit code + per-row pow2 scale storage and the
+decode-on-read datapath.
+
+Layout (per attention layer; no batch axis — pages are shared):
+
+  pool codes   (R, nkv, Dc)   R = num_pages * page_size flat rows;
+                              page p owns rows [p*ps, (p+1)*ps)
+  pool scales  (R, nkv) f32   per-(token x head) pow2 scale
+  page_table   (B, Pmax) i32  logical page -> physical page per slot;
+                              unallocated entries point at page 0, which
+                              the allocator reserves as a trash page
+  seq_lens     (B,) i32       valid tokens per slot (masks trash reads)
+
+  write path  ``paged_kv_append``     — the destination flat row
+      (table[b, pos//ps] * ps + pos%ps) is computed outside and handed to
+      the kernel as a scalar-prefetch vector, so only the written
+      (1, Dc) row blocks move between HBM and VMEM and the pool buffers
+      are donated (``input_output_aliases``), exactly like the ring
+      ``kv_append``.
+  read path   ``paged_decode_attention`` — the grid's innermost dim walks
+      the sequence's page list: the page-table row is scalar-prefetched
+      and the *index map* uses it to DMA physical pages into VMEM, where
+      posit tiles are decoded right before the online-softmax MACs.
+      (m, l, acc) live in VMEM scratch across the page walk.
+
+Pure-jnp references (``paged_kv_append_ref`` / ``paged_decode_attention_ref``
+/ ``gather_pages``) share the codec with the kernels, so CPU serving and
+the Pallas path agree bit-for-bit on pool contents; the reference read
+path reuses ``attention.decode_attention``'s dense masked softmax so ring
+and paged greedy decode match exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.formats import PositFormat
+from .kv_cache import (NEG_INF, decode_kv_rows, encode_kv_rows,
+                       unpack_nibbles)
+from .posit_decode import decode_tile
+
+
+def flat_dst_rows(page_table, pos, page_size: int):
+    """Per-slot flat pool row for writing the token at ``pos``.
+
+    page_table: (B, Pmax) i32; pos: (B,) i32.  The logical page index is
+    clamped so idle slots (whose pos may run past Pmax * ps) still map to
+    a valid row — their table entries are 0, the trash page."""
+    pmax = page_table.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    lpi = jnp.clip(pos // page_size, 0, pmax - 1)
+    phys = jnp.take_along_axis(page_table, lpi[:, None], axis=1)[:, 0]
+    return phys * page_size + pos % page_size
+
+
+# ---------------------------------------------------------------------------
+# paged_kv_append: encode-on-write into table-addressed pool rows (Pallas)
+# ---------------------------------------------------------------------------
+
+def _paged_append_kernel(dst_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref,
+                         vs_ref, kco_ref, kso_ref, vco_ref, vso_ref, *,
+                         fmt, packed):
+    del dst_ref, kc_ref, ks_ref, vc_ref, vs_ref  # row consumed by the specs
+    kc, ks = encode_kv_rows(kn_ref[0, 0, 0], fmt, packed)
+    vc, vs = encode_kv_rows(vn_ref[0, 0, 0], fmt, packed)
+    kco_ref[0, 0] = kc
+    vco_ref[0, 0] = vc
+    kso_ref[0, 0] = ks[0]
+    vso_ref[0, 0] = vs[0]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "packed", "interpret"))
+def paged_kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, dst,
+                    fmt: PositFormat, *, packed: bool = False,
+                    interpret=None):
+    """Encode-on-write append into the paged pool.
+
+    k/v_codes: (R, nkv, Dc) pool; k/v_scale: (R, nkv) f32; k/v_new:
+    (B, 1, nkv, hd) float; dst: (B,) i32 flat pool rows (``flat_dst_rows``).
+    Returns the four updated pool arrays (donated/aliased).  Two live
+    slots never share a row; idle slots may collide on the trash page,
+    where the sequential grid makes the write benign garbage."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, _, h, hd = k_new.shape
+    dc = k_codes.shape[-1]
+    dst = jnp.asarray(dst, jnp.int32).reshape(b)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
+            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_append_kernel, fmt=fmt, packed=packed),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(k_codes.shape, k_codes.dtype),
+            jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+            jax.ShapeDtypeStruct(v_codes.shape, v_codes.dtype),
+            jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype),
+        ],
+        # operand indices include the scalar-prefetch arg (index 0)
+        input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+        interpret=interpret,
+    )(dst, k_new, v_new, k_codes, k_scale, v_codes, v_scale)
+
+
+def paged_kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new,
+                        dst, fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle for ``paged_kv_append`` (same codec, XLA scatter)."""
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def wr(codes, scale, new):
+        c, s = encode_kv_rows(new[:, 0], fmt, packed)   # (B, nkv, Dc)
+        codes = codes.at[dst].set(c.astype(codes.dtype))
+        scale = scale.at[dst].set(s[..., 0])
+        return codes, scale
+
+    kc, ks = wr(k_codes, k_scale, k_new)
+    vc, vs = wr(v_codes, v_scale, v_new)
+    return kc, ks, vc, vs
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_attention: page-walking fused decode (Pallas)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_kernel(tbl_ref, len_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                       vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       fmt, packed, ps, npg):
+    del tbl_ref  # consumed by the index maps (page DMA addressing)
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode-on-read: one physical page's posit codes -> f32 in VMEM
+    kc = kc_ref[:, 0]                                          # (ps, Dc)
+    vc = vc_ref[:, 0]
+    k = decode_tile(unpack_nibbles(kc) if packed else kc,
+                    fmt, jnp.float32) * ks_ref[:, 0][:, None]  # (ps, hd)
+    v = decode_tile(unpack_nibbles(vc) if packed else vc,
+                    fmt, jnp.float32) * vs_ref[:, 0][:, None]
+    q = q_ref[0, 0].astype(jnp.float32)                        # (grp, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)    # (grp, ps)
+    kpos = pi * ps + jnp.arange(ps)
+    s = jnp.where((kpos < len_ref[bi])[None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_ref[...], s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == npg - 1)
+    def _finish():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "page_size", "packed",
+                                             "interpret"))
+def paged_decode_attention(q, k_codes, k_scale, v_codes, v_scale,
+                           page_table, seq_lens, fmt: PositFormat, *,
+                           page_size: int, packed: bool = False,
+                           interpret=None):
+    """Fused one-token GQA attention over a paged posit pool.
+
+    q: (B, 1, nh, hd); k/v_codes: (R, nkv, Dc) pool; k/v_scale: (R, nkv);
+    page_table: (B, Pmax) i32 (entries must be valid physical pages —
+    unallocated logical pages point at the trash page and are masked by
+    ``seq_lens``); seq_lens: (B,) i32.  The grid's innermost dimension
+    walks the Pmax page-table entries of each (slot, kv-head) row with
+    (m, l, acc) carried in VMEM scratch.  Returns (B, 1, nh, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    r, nkv, dc = k_codes.shape
+    b, _, nh, hd = q.shape
+    grp = nh // nkv
+    npg = page_table.shape[1]
+    num_pages = r // page_size
+    tbl = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, num_pages - 1)
+    lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
+    qg = (q.reshape(b, nkv, grp, hd) * (hd ** -0.5)).astype(jnp.float32)
+    ps = page_size
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nkv, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, grp, hd), lambda i, j, p, t, ln: (i, j, 0, 0)),
+            pl.BlockSpec((ps, 1, dc), lambda i, j, p, t, ln: (t[i, p], j, 0)),
+            pl.BlockSpec((ps, 1), lambda i, j, p, t, ln: (t[i, p], j)),
+            pl.BlockSpec((ps, 1, dc), lambda i, j, p, t, ln: (t[i, p], j, 0)),
+            pl.BlockSpec((ps, 1), lambda i, j, p, t, ln: (t[i, p], j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, grp, hd),
+                               lambda i, j, p, t, ln: (i, j, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((grp, 1), jnp.float32),
+                        pltpu.VMEM((grp, 1), jnp.float32),
+                        pltpu.VMEM((grp, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_attn_kernel, fmt=fmt, packed=packed,
+                          ps=ps, npg=npg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, grp, hd), jnp.float32),
+        interpret=interpret,
+    )(tbl, lens, qg, k_codes, k_scale, v_codes, v_scale)
+    return out.reshape(b, 1, nh, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp references
+# ---------------------------------------------------------------------------
+
+def gather_pages(pool, page_table, page_size: int):
+    """Gather a per-slot logical view from a flat pool.
+
+    pool: (R, ...) flat rows; page_table: (B, Pmax).  Returns
+    (B, Pmax * page_size, ...) — logical token order, trash rows included
+    (callers mask by seq_lens)."""
+    num_pages = pool.shape[0] // page_size
+    tbl = jnp.clip(jnp.asarray(page_table, jnp.int32), 0, num_pages - 1)
+    rows = tbl[:, :, None] * page_size + jnp.arange(page_size)[None, None, :]
+    b, npg = tbl.shape
+    return pool[rows.reshape(b, npg * page_size)]
+
+
+def gather_decode_pages(codes, scales, page_table, page_size: int,
+                        fmt: PositFormat, packed: bool = False):
+    """Gather a slot-logical view of a posit pool and decode it to floats:
+    (R, nkv, Dc) codes + (R, nkv) scales -> (B, Pmax*ps, nkv, hd).  The
+    single codec path shared by the reference attention and the serving
+    fallbacks, so ring/paged equivalence has one implementation to pin."""
+    return decode_kv_rows(
+        gather_pages(codes, page_table, page_size),
+        gather_pages(scales, page_table, page_size)[..., None], fmt, packed)
+
+
+def paged_decode_attention_ref(q, k_codes, k_scale, v_codes, v_scale,
+                               page_table, seq_lens, fmt: PositFormat, *,
+                               page_size: int, packed: bool = False):
+    """Pure-jnp oracle: gather the page list, decode, dense masked softmax
+    (via ``attention.decode_attention`` so ring/paged refs share the exact
+    reduction order)."""
+    from ..models.attention import decode_attention
+    k = gather_decode_pages(k_codes, k_scale, page_table, page_size, fmt,
+                            packed)
+    v = gather_decode_pages(v_codes, v_scale, page_table, page_size, fmt,
+                            packed)
+    return decode_attention(q, k, v, seq_lens)

@@ -29,6 +29,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-format", default=None,
+                    choices=["f32", "bf16", "posit16", "posit8", "posit4"],
+                    help="KV-cache storage override (None: policy default)")
+    ap.add_argument("--kv-layout", default=None, choices=["ring", "paged"],
+                    help="KV-cache layout override (None: policy default)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged layout: tokens per page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged layout: pool size incl. trash page "
+                         "(None: full reservation)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
@@ -36,7 +46,11 @@ def main():
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=args.batch,
                                        max_len=args.max_len,
-                                       temperature=args.temperature),
+                                       temperature=args.temperature,
+                                       kv_format=args.kv_format,
+                                       kv_layout=args.kv_layout,
+                                       page_size=args.page_size,
+                                       num_pages=args.num_pages),
                            policy=args.policy)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,

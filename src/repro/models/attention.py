@@ -246,18 +246,19 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
                      ring_offset=None):
     """One-token attention against a cache.
 
-    q: (B, 1, nh, hd); k/v_cache: (B, W, nkv, hd); cache_len: scalar count of
-    valid entries.  ``ring_offset`` marks the logical start for sliding-
-    window ring buffers.  Returns (B, 1, nh, hd).
+    q: (B, 1, nh, hd); k/v_cache: (B, W, nkv, hd); cache_len: count of
+    valid entries, scalar (shared) or (B,) per-slot.  ``ring_offset``
+    marks the logical start for sliding-window ring buffers.  Returns
+    (B, 1, nh, hd).
     """
     b, w, nkv, hd = k_cache.shape
     nh = q.shape[2]
     grp = nh // nkv
     qg = q.reshape(b, 1, nkv, grp, hd) * (hd ** -0.5)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
-    idx = jnp.arange(w)
-    valid = idx < cache_len
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    valid = jnp.arange(w)[None, :] < cl[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
     return out.reshape(b, 1, nh, hd)

@@ -10,9 +10,15 @@ layers exactly like training does (HLO size independent of depth):
 
 Attention writes are ring-buffered (idx = pos mod W) so sliding-window archs
 (recurrentgemma) keep O(window) memory during ``long_500k`` decode while the
-full-attention archs use W = max_len.  The distributed decode-attention
-(KV-sequence sharding + LSE combine) lives in ``repro/serve/distributed.py``
-— this module is the per-shard math it wraps.
+full-attention archs use W = max_len.  With ``policy.kv_layout == "paged"``
+the per-slot rings are replaced by a shared page pool + per-sequence page
+tables (``kernels/paged_kv.py``; ``cache["page_table"]`` (B, Pmax), flat
+pools (R, nkv, Dc) per layer, per-slot vector ``pos``) so HBM tracks live
+tokens.  ``cache["pos"]`` may be a scalar (legacy shared position) or a
+(B,) per-slot vector — rope, ring/page writes and attention masks all
+accept both.  The distributed decode-attention (KV-sequence sharding +
+LSE combine) lives in ``repro/serve/distributed.py`` — this module is the
+per-shard math it wraps.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 from ..core.quant import maybe_dequant
 from ..core.transprecision import BF16, KVStorage, TCPolicy, kv_storage
 from ..kernels import kv_cache as kv_kernels
+from ..kernels import paged_kv as paged_kernels
 from . import attention, rglru as rglru_mod, ssm as ssm_mod
 from .common import apply_rope, rms_norm
 from .lm import ModelCfg, _mlp, _qkv, _qw, _rope_cs, forward
@@ -40,16 +47,33 @@ def _kv_spec(policy: TCPolicy) -> Optional[KVStorage]:
     return kv_storage(policy)
 
 
+def _kv_layout(policy: TCPolicy) -> str:
+    layout = getattr(policy, "kv_layout", "ring")
+    if layout not in ("ring", "paged"):
+        raise ValueError(f"unknown kv_layout {layout!r}; known: ring|paged")
+    return layout
+
+
 def init_cache(cfg: ModelCfg, batch: int, max_len: int,
-               dtype=None, policy: TCPolicy = BF16) -> Dict[str, Any]:
+               dtype=None, policy: TCPolicy = BF16, *,
+               num_pages: Optional[int] = None) -> Dict[str, Any]:
     """Empty decode state for a batch of sequences up to max_len tokens.
 
     With a posit ``kv_format`` (or legacy ``packed_kv``) the attention K/V
     rings hold posit CODES plus per-row f32 pow2 scales (``k_scale`` /
     ``v_scale``, shape (B, W, nkv)) — the decode-on-read datapath;
-    recurrent/SSM states stay full precision (rewritten every step)."""
+    recurrent/SSM states stay full precision (rewritten every step).
+
+    With ``policy.kv_layout == "paged"`` the per-slot rings are replaced
+    by a shared flat page pool (R = num_pages * kv_page_size rows, no
+    batch axis) plus a top-level ``page_table`` (B, Pmax) and per-slot
+    vector ``pos``.  ``num_pages=None`` fully reserves (1 trash page +
+    batch * Pmax) and installs the identity table, so standalone
+    prefill/decode works without an allocator; an engine passes its own
+    (smaller) pool size and manages the table itself."""
     spec = _kv_spec(policy)
     posit_kv = spec is not None and spec.is_posit
+    paged = _kv_layout(policy) == "paged"
     if posit_kv:
         dt = dtype or cfg.dtype            # cross-K/V, memory stay float
         kv_ch = kv_kernels.code_channels(cfg.head_dim, spec.fmt, spec.packed)
@@ -57,6 +81,16 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
         dt = dtype or (spec.dtype if spec is not None else cfg.dtype)
     hd, nkv = cfg.head_dim, cfg.n_kv_heads
     w = _attn_w(cfg, max_len)
+    if paged:
+        if cfg.window:
+            raise ValueError("paged KV layout does not support sliding-"
+                             "window attention; use kv_layout='ring'")
+        ps = policy.kv_page_size
+        pmax = -(-max_len // ps)           # logical pages per slot
+        full_pool = num_pages is None
+        if full_pool:
+            num_pages = 1 + batch * pmax   # page 0 is the trash page
+        pool_rows = num_pages * ps
     d_in = cfg.ssm_expand * cfg.d_model
     nh_ssm = d_in // cfg.ssm_headdim
     conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
@@ -66,7 +100,16 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
             s = (stacked,) + shape if stacked else shape
             return jnp.zeros(s, dtype)
         if btype == "attn":
-            if posit_kv:
+            if paged:
+                kv_dt = spec.fmt.storage_dtype if posit_kv else dt
+                c = {"k": z((pool_rows, nkv, kv_ch if posit_kv else hd),
+                            kv_dt),
+                     "v": z((pool_rows, nkv, kv_ch if posit_kv else hd),
+                            kv_dt)}
+                if posit_kv:
+                    c["k_scale"] = z((pool_rows, nkv), jnp.float32) + 1.0
+                    c["v_scale"] = z((pool_rows, nkv), jnp.float32) + 1.0
+            elif posit_kv:
                 c = {"k": z((batch, w, nkv, kv_ch), spec.fmt.storage_dtype),
                      "v": z((batch, w, nkv, kv_ch), spec.fmt.storage_dtype),
                      "k_scale": z((batch, w, nkv), jnp.float32) + 1.0,
@@ -90,9 +133,19 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
         raise ValueError(btype)
 
     cache: Dict[str, Any] = {
-        "pos": jnp.zeros((), jnp.int32),
+        # paged serving needs true per-slot positions; ring keeps the
+        # legacy scalar for existing single-sequence callers (both shapes
+        # are supported throughout the decode path)
+        "pos": jnp.zeros((batch,) if paged else (), jnp.int32),
         "blocks": tuple(block_cache(t, cfg.n_periods) for t in cfg.period),
     }
+    if paged:
+        if full_pool:   # identity table: slot i owns pages 1+i*pmax ..
+            table = 1 + jnp.arange(batch * pmax, dtype=jnp.int32).reshape(
+                batch, pmax)
+        else:           # caller (engine/allocator) manages the table
+            table = jnp.zeros((batch, pmax), jnp.int32)
+        cache["page_table"] = table
     if cfg.n_tail:
         tail_types = cfg.block_types[cfg.n_periods * len(cfg.period):]
         cache["tail"] = tuple(block_cache(t, 0) for t in tail_types)
@@ -106,8 +159,13 @@ def init_cache(cfg: ModelCfg, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 def _ring_write(buf, val, pos):
-    """buf: (B, W, ...); val: (B, 1, ...); write at pos mod W."""
+    """buf: (B, W, ...); val: (B, 1, ...); write at pos mod W.
+    ``pos`` scalar (shared) or (B,) per-slot."""
     w = buf.shape[1]
+    pos = jnp.asarray(pos)
+    if pos.ndim:
+        return buf.at[jnp.arange(buf.shape[0]), pos % w].set(
+            val[:, 0].astype(buf.dtype))
     return jax.lax.dynamic_update_slice_in_dim(buf, val.astype(buf.dtype),
                                                pos % w, axis=1)
 
@@ -124,18 +182,86 @@ def _ring_append_packed(c, kp, vp, pos, spec: KVStorage):
     return kv_kernels.kv_append(*args, spec.fmt, packed=spec.packed)
 
 
-def _attn_decode(p, c, x, cfg, policy, pos, memory=None, attn_impl=None):
+def _paged_append_packed(c, kp, vp, dst, spec: KVStorage):
+    """Encode-on-write append into the paged pool (Pallas on accelerators,
+    bit-identical pure-jnp reference on CPU)."""
+    args = (c["k"], c["k_scale"], c["v"], c["v_scale"],
+            kp.astype(jnp.float32), vp.astype(jnp.float32), dst)
+    if jax.default_backend() == "cpu":
+        return paged_kernels.paged_kv_append_ref(*args, spec.fmt, spec.packed)
+    return paged_kernels.paged_kv_append(*args, spec.fmt, packed=spec.packed)
+
+
+def _attn_decode_paged(c, cfg, policy, pos, qp, kp, vp, table, attn_impl):
+    """Paged-pool K/V append + page-walking attention for one layer.
+
+    ``pos`` must be a (B,) per-slot vector; ``c["k"]``/``c["v"]`` are flat
+    pools (R, nkv, Dc|hd) shared by all slots; ``table`` is the top-level
+    (B, Pmax) page table (shared across layers, closed over by the layer
+    scan)."""
+    spec = _kv_spec(policy)
+    posit_kv = spec is not None and spec.is_posit
+    ps = policy.kv_page_size
+    dst = paged_kernels.flat_dst_rows(table, pos, ps)
+    seq_lens = pos + 1
+    new_c = {}
+    if posit_kv:
+        kc, ks, vc, vs = _paged_append_packed(c, kp, vp, dst, spec)
+        if attn_impl is not None and getattr(attn_impl, "paged_kv", False):
+            # paged protocol: pool codes + scales + the page table cross
+            # the impl boundary (the distributed path ships all three)
+            ao = attn_impl(qp, kc, vc, seq_lens, k_scale=ks, v_scale=vs,
+                           kv_spec=spec, page_table=table, page_size=ps)
+        elif attn_impl is not None:
+            k_read = paged_kernels.gather_decode_pages(
+                kc, ks, table, ps, spec.fmt, spec.packed)
+            v_read = paged_kernels.gather_decode_pages(
+                vc, vs, table, ps, spec.fmt, spec.packed)
+            ao = attn_impl(qp, k_read, v_read, seq_lens)
+        elif jax.default_backend() == "cpu":
+            ao = paged_kernels.paged_decode_attention_ref(
+                qp, kc, ks, vc, vs, table, seq_lens, spec.fmt,
+                page_size=ps, packed=spec.packed)
+        else:
+            ao = paged_kernels.paged_decode_attention(
+                qp, kc, ks, vc, vs, table, seq_lens, spec.fmt,
+                page_size=ps, packed=spec.packed)
+        new_c.update(k=kc, v=vc, k_scale=ks, v_scale=vs)
+    else:
+        kc = c["k"].at[dst].set(kp[:, 0].astype(c["k"].dtype))
+        vc = c["v"].at[dst].set(vp[:, 0].astype(c["v"].dtype))
+        k_read = paged_kernels.gather_pages(kc, table, ps)
+        v_read = paged_kernels.gather_pages(vc, table, ps)
+        attn_fn = attn_impl or attention.decode_attention
+        ao = attn_fn(qp, k_read, v_read, seq_lens)
+        new_c.update(k=kc, v=vc)
+    return ao, new_c
+
+
+def _attn_decode(p, c, x, cfg, policy, pos, memory=None, attn_impl=None,
+                 page_table=None):
     b = x.shape[0]
     spec = _kv_spec(policy)
     posit_kv = spec is not None and spec.is_posit
+    paged = page_table is not None
+    pos = jnp.asarray(pos)
+    if paged and pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
     h = rms_norm(x, p["ln"])
     qp, kp, vp = _qkv(p, h, cfg, policy)
-    posv = jnp.full((b, 1), pos) if cfg.mrope else pos[None]
+    if pos.ndim:                       # per-slot positions: (B, 1) rope
+        posv = pos[:, None]
+    else:
+        posv = jnp.full((b, 1), pos) if cfg.mrope else pos[None]
     cos, sin = _rope_cs(cfg, posv)
     qp = apply_rope(qp, cos, sin)
     kp = apply_rope(kp, cos, sin)
     new_c = dict(c)
-    if posit_kv:
+    if paged:
+        ao, nc = _attn_decode_paged(c, cfg, policy, pos, qp, kp, vp,
+                                    page_table, attn_impl)
+        new_c.update(nc)
+    elif posit_kv:
         kc, ks, vc, vs = _ring_append_packed(c, kp, vp, pos, spec)
         w = kc.shape[1]
         cl = jnp.minimum(pos + 1, w)
@@ -204,10 +330,10 @@ def _ssm_decode(p, c, x, cfg, policy):
 
 
 def _block_decode(btype, p, c, x, cfg, policy, pos, memory=None,
-                  attn_impl=None):
+                  attn_impl=None, page_table=None):
     if btype == "attn":
         return _attn_decode(p, c, x, cfg, policy, pos, memory=memory,
-                            attn_impl=attn_impl)
+                            attn_impl=attn_impl, page_table=page_table)
     if btype == "rec":
         return _rec_decode(p, c, x, cfg, policy)
     if btype == "ssm":
@@ -222,6 +348,7 @@ def decode_step(params, cache, tokens, cfg: ModelCfg,
     """One serving step. tokens: (B, 1) int32 (or embeds (B, 1, d) for vlm).
     Returns (logits (B, vocab_pad), new_cache)."""
     pos = cache["pos"]
+    page_table = cache.get("page_table")
     if embeds is not None:
         x = embeds.astype(cfg.dtype)
     else:
@@ -236,7 +363,8 @@ def decode_step(params, cache, tokens, cfg: ModelCfg,
         for i, btype in enumerate(cfg.period):
             x, nc = _block_decode(btype, pparams[i], pcache[i], x, cfg,
                                   policy, pos, memory=memory,
-                                  attn_impl=attn_impl)
+                                  attn_impl=attn_impl,
+                                  page_table=page_table)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -249,7 +377,8 @@ def decode_step(params, cache, tokens, cfg: ModelCfg,
         new_tail = []
         for p_i, c_i, btype in zip(params["tail"], cache["tail"], tail_types):
             x, nc = _block_decode(btype, p_i, c_i, x, cfg, policy, pos,
-                                  memory=memory, attn_impl=attn_impl)
+                                  memory=memory, attn_impl=attn_impl,
+                                  page_table=page_table)
             new_tail.append(nc)
         new_cache["tail"] = tuple(new_tail)
     x = rms_norm(x, params["final_norm"])
@@ -282,6 +411,10 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
     cache = init_cache(cfg, b, max_len, policy=policy)
     spec = _kv_spec(policy)
     posit_kv = spec is not None and spec.is_posit
+    paged = _kv_layout(policy) == "paged"
+    if paged and s > max_len:
+        raise ValueError(f"prompt length {s} exceeds max_len {max_len} "
+                         "for the paged KV layout")
     w = _attn_w(cfg, max_len)
     memory = None
     if cfg.family == "audio":
@@ -292,9 +425,29 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
     start = max(s - w, 0)
     length = min(s, w)
     ring_idx = (start + jnp.arange(length)) % w
+    if paged:
+        # per-slot flat pool rows for prompt positions 0..s-1
+        ps = policy.kv_page_size
+        tok_idx = jnp.arange(s)
+        flat_rows = (cache["page_table"][:, tok_idx // ps] * ps
+                     + (tok_idx % ps)[None, :]).reshape(-1)      # (b*s,)
 
     def fill(buf, kv):
         return buf.at[:, ring_idx].set(kv[:, start:start + length].astype(buf.dtype))
+
+    def fill_paged(nc, c_i, name, kv):
+        """Bulk write of the prompt's K/V rows into the page pool."""
+        if posit_kv:
+            codes, scale = kv_kernels.encode_kv_rows(
+                kv.astype(jnp.float32), spec.fmt, spec.packed)
+            nc[name] = c_i[name].at[flat_rows].set(
+                codes.reshape((b * s,) + codes.shape[2:]).astype(
+                    c_i[name].dtype))
+            nc[name + "_scale"] = c_i[name + "_scale"].at[flat_rows].set(
+                scale[..., 0].reshape(b * s, -1))
+        else:
+            nc[name] = c_i[name].at[flat_rows].set(
+                kv.reshape((b * s,) + kv.shape[2:]).astype(c_i[name].dtype))
 
     def fill_packed(nc, c_i, name, kv):
         """Bulk encode-on-write of the prompt's K/V rows into the ring."""
@@ -322,7 +475,10 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
             x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, s, -1),
                                _qw(policy, "attn_weights")(p_i["wo"]))
             nc = dict(c_i)
-            if posit_kv:
+            if paged:
+                fill_paged(nc, c_i, "k", kp)
+                fill_paged(nc, c_i, "v", vp)
+            elif posit_kv:
                 fill_packed(nc, c_i, "k", kp)
                 fill_packed(nc, c_i, "v", vp)
             else:
@@ -397,5 +553,6 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
     x = rms_norm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embed else params["lm_head"]
     logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
-    cache["pos"] = jnp.asarray(s, jnp.int32)
+    cache["pos"] = (jnp.full((b,), s, jnp.int32) if paged
+                    else jnp.asarray(s, jnp.int32))
     return logits, cache

@@ -1,2 +1,3 @@
-from .engine import ServeConfig, ServingEngine
+from .engine import Request, ServeConfig, ServingEngine
 from .distributed import distributed_decode_attention, make_distributed_decode_step
+from .paged import PageAllocator, SlotPages, pages_for

@@ -52,13 +52,15 @@ def _local_lse(q, k, v, start, cache_len):
     """Partial attention over a local KV slice.
 
     q: (B, 1, nkv, grp, hd); k/v: (B, Wl, nkv, hd); start: global index of
-    this slice.  Returns (o (B,nkv,grp,hd), l (B,nkv,grp), m (B,nkv,grp)).
+    this slice; cache_len scalar (shared) or (B,) per-slot.  Returns
+    (o (B,nkv,grp,hd), l (B,nkv,grp), m (B,nkv,grp)).
     """
     b, wl = k.shape[0], k.shape[1]
     scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)[..., 0, :]
     idx = start + jnp.arange(wl)
-    valid = idx < cache_len
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    valid = idx[None, :] < cl[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     m = scores.max(-1)                                    # (B, nkv, grp)
     p = jnp.exp(scores - m[..., None])
     l = p.sum(-1)
@@ -67,7 +69,8 @@ def _local_lse(q, k, v, start, cache_len):
 
 
 def distributed_decode_attention(mesh: Mesh, axis: str = "model",
-                                 kv_spec=None):
+                                 kv_spec=None, *, paged: bool = False,
+                                 page_size: int = 16):
     """Returns an ``attn_impl(q, k_cache, v_cache, cache_len)`` whose KV
     cache is *manually* sharded along ``axis`` on its sequence dim.
 
@@ -76,8 +79,71 @@ def distributed_decode_attention(mesh: Mesh, axis: str = "model",
     payload is posit CODES + per-row scales sharded along the sequence
     axis — each shard decodes its slice locally right before the partial
     LSE reduction, so full-precision K/V never cross HBM or ICI and the
-    sharded cache stays ``bits/16`` of the bf16 footprint."""
+    sharded cache stays ``bits/16`` of the bf16 footprint.
+
+    With ``paged=True`` (posit spec only) the impl speaks the *paged*
+    protocol (``attn.paged_kv = True``): the pool's flat rows are sharded
+    along ``axis`` — each shard owns a contiguous physical page range —
+    while the page table and per-slot lengths ship replicated next to the
+    codes + scales.  A shard gathers only the table entries that fall in
+    its page range, masks the rest, and joins the same O(activation-row)
+    LSE combine; collective volume stays independent of context length
+    AND of how many pages are live.  Requires num_pages divisible by the
+    ``axis`` size (pages never straddle shards)."""
     n_shard = mesh.shape[axis]
+    if paged and kv_spec is not None and kv_spec.is_posit:
+        from ..kernels import kv_cache as kv_kernels
+
+        def attn_paged(q, k_codes, v_codes, seq_lens, *, k_scale, v_scale,
+                       page_table, page_size=page_size, **_):
+            r, nkv, _ = k_codes.shape
+            b, _, nh, hd = q.shape
+            grp = nh // nkv
+            qg = q.reshape(b, 1, nkv, grp, hd) * (hd ** -0.5)
+            lens = jnp.broadcast_to(jnp.asarray(seq_lens, jnp.int32), (b,))
+            tbl = jnp.asarray(page_table, jnp.int32)
+
+            def shard_fn(qs, kc, ks, vc, vs, tb, ln):
+                np_local = kc.shape[0] // page_size
+                start = jax.lax.axis_index(axis) * np_local
+                loc = tb - start                       # local page ids
+                own = (loc >= 0) & (loc < np_local)    # (B, Pmax)
+                rows = (jnp.clip(loc, 0, np_local - 1)[:, :, None]
+                        * page_size + jnp.arange(page_size)).reshape(b, -1)
+                kf = kv_kernels.decode_kv_rows(
+                    kc[rows], ks[rows][..., None], kv_spec.fmt,
+                    kv_spec.packed)                    # (B, L, nkv, hd)
+                vf = kv_kernels.decode_kv_rows(
+                    vc[rows], vs[rows][..., None], kv_spec.fmt,
+                    kv_spec.packed)
+                s = jnp.einsum("bqkgh,bskh->bkgqs", qs,
+                               kf).astype(jnp.float32)[..., 0, :]
+                kpos = jnp.arange(rows.shape[1])
+                valid = (jnp.repeat(own, page_size, axis=1)
+                         & (kpos[None, :] < ln[:, None]))
+                s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+                m = s.max(-1)
+                p = jnp.exp(s - m[..., None])
+                l = p.sum(-1)
+                o = jnp.einsum("bkgs,bskh->bkgh", p.astype(vf.dtype),
+                               vf).astype(jnp.float32)
+                m_g = jax.lax.pmax(m, axis)
+                corr = jnp.exp(m - m_g)
+                num = jax.lax.psum(o * corr[..., None], axis)
+                den = jax.lax.psum(l * corr, axis)
+                return (num / jnp.maximum(den, 1e-30)[..., None]).astype(
+                    q.dtype)
+
+            out = _shard_map(
+                shard_fn, mesh,
+                in_specs=(P(), P(axis, None, None), P(axis, None),
+                          P(axis, None, None), P(axis, None), P(), P()),
+                out_specs=P(), axis=axis)(qg, k_codes, k_scale, v_codes,
+                                          v_scale, tbl, lens)
+            return out.reshape(b, 1, nh, hd)
+
+        attn_paged.paged_kv = True
+        return attn_paged
     if kv_spec is not None and kv_spec.is_posit:
         from ..kernels import kv_cache as kv_kernels
 
@@ -148,8 +214,10 @@ def make_distributed_decode_step(cfg, policy, mesh: Mesh, rules,
                                  axis: str = "model"):
     """decode_step with the LSE-combined distributed attention plugged in."""
     from ..core.transprecision import kv_storage
-    attn_impl = distributed_decode_attention(mesh, axis,
-                                             kv_spec=kv_storage(policy))
+    attn_impl = distributed_decode_attention(
+        mesh, axis, kv_spec=kv_storage(policy),
+        paged=getattr(policy, "kv_layout", "ring") == "paged",
+        page_size=getattr(policy, "kv_page_size", 16))
 
     def step(params, cache, tok):
         if cfg.family == "vlm":

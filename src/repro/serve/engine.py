@@ -3,13 +3,28 @@ transprecision model (posit-packed weights decoded on load).
 
 Slot-based continuous batching: a fixed batch of B slots; finished
 sequences free their slot and the next queued request is prefilled into it
-(its KV rows overwritten) while other slots keep decoding — the standard
-production pattern (vLLM-style) reduced to its JAX-native core:
+while other slots keep decoding — the standard production pattern
+(vLLM-style) reduced to its JAX-native core:
 
-* ``decode_step`` is ONE jitted program for the whole batch (slots carry
-  per-slot positions via the shared cache ``pos`` + per-slot offsets);
-* prefill for a joining request runs as a separate jitted call whose cache
-  writes are merged into the live batch cache at its slot index;
+* ``decode_step`` is ONE jitted program for the whole batch, with TRUE
+  per-slot positions (``cache["pos"]`` is a (B,) vector): heterogeneous
+  prompt lengths batch correctly — each slot ropes, writes and masks at
+  its own position, so greedy outputs match single-sequence decode
+  exactly;
+* prefill for a joining request runs as a separate jitted call whose
+  K/V rows are merged into the live batch cache with donated
+  ``dynamic_update_slice`` / page-pool scatters on only the leaves that
+  carry per-slot state (no full-cache copy per admission);
+* two KV layouts (``kv_layout``): ``ring`` reserves a dense max_len ring
+  per slot; ``paged`` runs a shared posit page pool + per-sequence page
+  tables (``serve/paged.py`` allocator, ``kernels/paged_kv.py`` device
+  path) so HBM tracks live tokens and freed sequences return their pages
+  immediately.  Admission control reserves each request's worst-case
+  page demand (prompt + max_new) in accounting while allocating pages on
+  demand, so mid-decode growth never exhausts the pool;
+* admission scans the whole queue for the first admissible request, so
+  one oversized/unplaceable head never starves slots later entries could
+  fill (no head-of-line blocking);
 * sampling: greedy or temperature (per-request).
 
 For single-host examples this runs real tokens end-to-end; the multi-pod
@@ -25,9 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.transprecision import BF16, TCPolicy, get_policy, kv_storage
+from ..core.transprecision import BF16, TCPolicy, get_policy
 from ..models import lm
 from ..models.serve_model import decode_step, init_cache, prefill
+from .paged import PageAllocator, SlotPages, pages_for
+
+_KV_LEAF_NAMES = ("k", "v", "k_scale", "v_scale", "xk", "xv")
+_POOL_LEAF_NAMES = ("k", "v", "k_scale", "v_scale")
 
 
 @dataclasses.dataclass
@@ -40,6 +59,17 @@ class ServeConfig:
     # KV-cache storage override (f32|bf16|posit16|posit8|posit4); None
     # keeps the policy's own kv_format / legacy packed_kv resolution.
     kv_format: Optional[str] = None
+    # KV-cache layout override (ring|paged); None keeps the policy's.
+    kv_layout: Optional[str] = None
+    # paged layout: tokens per page (None keeps the policy's) and total
+    # physical pages incl. the trash page (None = full reservation:
+    # 1 + max_batch * ceil(max_len / page_size)).  Undersizing the pool
+    # is how paging saves HBM: pages are *allocated* on demand as
+    # sequences grow, but admission *reserves* each request's worst case
+    # (prompt + max_new) in accounting, so decode-time growth can never
+    # exhaust the pool — requests queue until reservations free up.
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -49,6 +79,19 @@ class Request:
     max_new: int = 32
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    error: Optional[str] = None  # set when the request is rejected
+
+
+def _slot_update(dst, src, slot):
+    """Write the single-row ``src`` into ``dst`` at batch index ``slot``.
+    The batch axis is the first axis where the sizes differ; identical
+    shapes mean max_batch == 1 (take src)."""
+    if dst.shape == src.shape:
+        return src.astype(dst.dtype)
+    ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+              if a != b)
+    return jax.lax.dynamic_update_slice_in_dim(
+        dst, src.astype(dst.dtype), slot, axis=ax)
 
 
 class ServingEngine:
@@ -57,38 +100,104 @@ class ServingEngine:
         self.cfg = cfg
         self.scfg = scfg
         self.policy = get_policy(policy)
+        overrides = {}
         if scfg.kv_format is not None:
+            overrides["kv_format"] = scfg.kv_format
+        if scfg.kv_layout is not None:
+            overrides["kv_layout"] = scfg.kv_layout
+        if scfg.page_size is not None:
+            overrides["kv_page_size"] = scfg.page_size
+        if overrides:
+            tag = "+".join(f"{k[3:]}_{v}" for k, v in overrides.items())
             self.policy = dataclasses.replace(
-                self.policy, kv_format=scfg.kv_format,
-                name=f"{self.policy.name}+kv_{scfg.kv_format}")
+                self.policy, name=f"{self.policy.name}+{tag}", **overrides)
         self.params = params
         b, L = scfg.max_batch, scfg.max_len
+        self.paged = self.policy.kv_layout == "paged"
 
-        # one shared cache; per-slot sequence positions
-        self.cache = init_cache(cfg, b, L, policy=self.policy)
-        self.slot_pos = np.zeros(b, np.int64)         # tokens generated so far
+        if self.paged:
+            ps = self.policy.kv_page_size
+            self._pmax = pages_for(L, ps)
+            self.num_pages = (scfg.num_pages if scfg.num_pages is not None
+                              else 1 + b * self._pmax)
+            self.allocator = PageAllocator(self.num_pages, ps)
+            self.slot_pages = [SlotPages(ps) for _ in range(b)]
+            # worst-case page reservations (admission control): pages a
+            # slot may still grow into are committed but not yet allocated
+            self._committed = 0
+            self._slot_commit = [0] * b
+            self._table = np.zeros((b, self._pmax), np.int32)
+            self.cache = init_cache(cfg, b, L, policy=self.policy,
+                                    num_pages=self.num_pages)
+            self.cache["page_table"] = jnp.asarray(self._table)
+            # prompts prefill through the ring datapath (identical codec)
+            # and their rows are scattered into pool pages at admission
+            self._prefill_policy = dataclasses.replace(
+                self.policy, kv_layout="ring",
+                name=self.policy.name + "+prefill_ring")
+        else:
+            self.allocator = None
+            self.cache = init_cache(cfg, b, L, policy=self.policy)
+            self._prefill_policy = self.policy
+        # true per-slot positions (both layouts)
+        self.cache["pos"] = jnp.zeros((b,), jnp.int32)
+        self.slot_pos = np.zeros(b, np.int64)         # valid tokens per slot
         self.slot_req: List[Optional[Request]] = [None] * b
         self.last_tok = np.zeros((b, 1), np.int32)
 
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, c, t, cfg, self.policy))
         self._prefill = jax.jit(
-            lambda p, batch: prefill(p, batch, cfg, L, self.policy))
+            lambda p, batch: prefill(p, batch, cfg, L, self._prefill_policy))
+        # donation keeps admission from copying the whole batch cache
+        # (ignored with a warning on CPU, so only request it off-CPU)
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._merge = jax.jit(self._merge_prefill, donate_argnums=donate)
         self._rng = np.random.default_rng(scfg.seed)
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
+                      "rejected": 0, "peak_live_pages": 0,
                       "kv_cache_bytes": self.kv_cache_bytes()}
 
+    # ---- cache footprint ----
+    def _kv_bytes(self, pool_frac: float = 1.0) -> int:
+        """Sum KV-cache leaf bytes across any cache layout by leaf name
+        (``k``/``v``/scales/cross-K/V at any depth — no layout-specific
+        key assumptions).  ``pool_frac`` scales page-pool leaves (paged
+        layout) by an allocated-page fraction; cross-K/V does not page."""
+
+        total = 0.0
+
+        def visit(kp, leaf):
+            nonlocal total
+            name = str(getattr(kp[-1], "key", getattr(kp[-1], "idx", kp[-1])))
+            if name not in _KV_LEAF_NAMES or not hasattr(leaf, "dtype"):
+                return
+            nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            if self.paged and name in _POOL_LEAF_NAMES:
+                nbytes *= pool_frac
+            total += nbytes
+
+        jax.tree_util.tree_map_with_path(visit, dict(self.cache))
+        return int(total)
+
     def kv_cache_bytes(self) -> int:
-        """HBM footprint of the attention K/V rings (codes + scales)."""
-        total = 0
-        for blocks in (self.cache.get("blocks", ()),
-                       self.cache.get("tail", ())):
-            for c in blocks:
-                for name in ("k", "v", "k_scale", "v_scale"):
-                    if name in c:
-                        a = c[name]
-                        total += int(np.prod(a.shape)) * a.dtype.itemsize
-        return total
+        """Reserved HBM footprint of the attention K/V state (codes +
+        scales + cross-K/V), for every layout."""
+        return self._kv_bytes()
+
+    def kv_cache_live_bytes(self) -> int:
+        """Footprint counting only allocated pages for the paged layout
+        (== reserved for ring, which preallocates everything)."""
+        if not self.paged:
+            return self._kv_bytes()
+        return self._kv_bytes(self.allocator.live_pages / self.num_pages)
+
+    def kv_cache_peak_live_bytes(self) -> int:
+        """High-water live-page footprint over the served run (== reserved
+        for ring)."""
+        if not self.paged:
+            return self._kv_bytes()
+        return self._kv_bytes(self.stats["peak_live_pages"] / self.num_pages)
 
     # ---- slot management ----
     def _free_slot(self) -> Optional[int]:
@@ -97,36 +206,128 @@ class ServingEngine:
                 return i
         return None
 
+    def _merge_prefill(self, cache, cache1, slot, dst_rows):
+        """Merge a single-row prefill cache into the batch cache at
+        ``slot`` — donated, touching only the per-slot leaves.
+
+        Ring K/V (and recurrent/SSM/cross state) rows land via
+        ``dynamic_update_slice``; with the paged layout the prompt's K/V
+        rows are scattered into the slot's pool pages at the
+        ``dst_rows`` flat rows instead (codes are codec-identical between
+        the ring prefill and the pool, so this is a pure relayout)."""
+        s_len = dst_rows.shape[0] if dst_rows is not None else 0
+
+        def merge_block(dstb, srcb, stacked):
+            out = {}
+            for name, d in dstb.items():
+                s = srcb[name]
+                if self.paged and name in _POOL_LEAF_NAMES:
+                    if stacked:            # (P, R, ...) <- (P, 1, W, ...)
+                        rows = s[:, 0, :s_len]
+                        out[name] = d.at[:, dst_rows].set(rows.astype(d.dtype))
+                    else:                  # (R, ...) <- (1, W, ...)
+                        out[name] = d.at[dst_rows].set(
+                            s[0, :s_len].astype(d.dtype))
+                else:
+                    out[name] = _slot_update(d, s, slot)
+            return out
+
+        new_cache = dict(cache)
+        new_cache["pos"] = cache["pos"].at[slot].set(
+            jnp.max(cache1["pos"]).astype(cache["pos"].dtype))
+        new_cache["blocks"] = tuple(
+            merge_block(d, s, True)
+            for d, s in zip(cache["blocks"], cache1["blocks"]))
+        if "tail" in cache:
+            new_cache["tail"] = tuple(
+                merge_block(d, s, False)
+                for d, s in zip(cache["tail"], cache1["tail"]))
+        # any other top-level per-slot state (e.g. audio "memory", future
+        # family additions) merges generically; page_table is engine-owned
+        # and absent from the ring prefill cache
+        for name, d in cache.items():
+            if name in ("pos", "blocks", "tail", "page_table"):
+                continue
+            if name in cache1:
+                new_cache[name] = _slot_update(d, cache1[name], slot)
+        return new_cache
+
     def add_request(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot; False if engine is full."""
+        """Prefill ``req`` into a free slot; False if no slot (or, paged,
+        not enough free pages) — the request stays queued.  Prompts that
+        can never fit (``serve`` rejects these up front) are a caller
+        error here: raising beats silently corrupting the page
+        accounting."""
+        s_len = len(req.prompt)
+        if s_len >= self.scfg.max_len:
+            raise ValueError(f"prompt length {s_len} >= max_len "
+                             f"{self.scfg.max_len}; reject before admission")
         slot = self._free_slot()
         if slot is None:
             return False
+        dst_rows = None
+        if self.paged:
+            ps = self.allocator.page_size
+            # admission control reserves the worst case this request can
+            # grow to; allocation itself stays on-demand (live bytes track
+            # actual tokens), and the reservation invariant guarantees the
+            # growth allocs in step() can never fail
+            worst = self._worst_pages(req)
+            if self._committed + worst > self.num_pages - 1:
+                return False
+            pages = self.allocator.alloc(pages_for(s_len + 1, ps))
+            if pages is None:       # unreachable under the invariant
+                return False
+            self._committed += worst
+            self._slot_commit[slot] = worst
+            self.slot_pages[slot] = sp = SlotPages(ps, pages)
+            self._table[slot] = sp.table_row(self._pmax)
+            self.cache["page_table"] = jnp.asarray(self._table)
+            t = np.arange(s_len)
+            dst_rows = jnp.asarray(
+                np.asarray(pages, np.int64)[t // ps] * ps + t % ps, jnp.int32)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-        # merge the single-row cache into the batch cache at ``slot``
-        def merge(dst, src):
-            if dst.ndim == 0:                 # pos handled below
-                return dst
-            if dst.shape == src.shape:        # max_batch == 1: take src
-                return src.astype(dst.dtype)
-            # batch axis is the first axis where the sizes differ
-            ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
-                      if a != b)
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=ax)
-        new_cache = jax.tree.map(merge, dict(self.cache), dict(cache1))
-        # shared decode position = furthest slot (exact when concurrent
-        # prompts share a length — the engine pads to that in production;
-        # per-slot position vectors are the general extension)
-        new_cache["pos"] = jnp.maximum(self.cache["pos"], cache1["pos"])
-        self.cache = new_cache
+        self.cache = self._merge(self.cache, cache1,
+                                 jnp.asarray(slot, jnp.int32), dst_rows)
         self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
+        self.slot_pos[slot] = s_len
         self.last_tok[slot, 0] = int(self._sample(np.asarray(logits))[0])
         req.out_tokens.append(int(self.last_tok[slot, 0]))
         self.stats["prefills"] += 1
+        self.stats["tokens"] += 1
+        # prompt-only requests (max_new <= 1, or immediate EOS) finish at
+        # admission — no decode tick, slot and pages free right away
+        if (len(req.out_tokens) >= req.max_new
+                or req.out_tokens[-1] == self.scfg.eos_id):
+            req.done = True
+            self._free_request_slot(slot)
         return True
+
+    def _worst_pages(self, req: Request) -> int:
+        """Worst-case page demand of ``req``: prompt + max_new tokens,
+        capped by max_len (the engine stops a slot before max_len) and
+        floored at prompt + 1 — admission always allocates a page for the
+        first decode append, so the reservation must cover it even when
+        max_new is 0."""
+        s = len(req.prompt)
+        tokens = min(max(s + req.max_new, s + 1), self.scfg.max_len)
+        return pages_for(tokens, self.allocator.page_size)
+
+    def _free_request_slot(self, slot: int) -> None:
+        """Release a finished request's slot (paged: return its pages to
+        the allocator immediately and point the slot at the trash page)."""
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        if self.paged:
+            self._committed -= self._slot_commit[slot]
+            self._slot_commit[slot] = 0
+            self.allocator.free(self.slot_pages[slot].pages)
+            self.slot_pages[slot] = SlotPages(self.allocator.page_size)
+            self._table[slot] = 0
+            self.cache["page_table"] = jnp.asarray(self._table)
+            # park the idle slot's write position on the trash page
+            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
 
     def _sample(self, logits: np.ndarray) -> np.ndarray:
         logits = logits[..., : self.cfg.vocab]
@@ -142,8 +343,27 @@ class ServingEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        # shared-pos model: the cache pos advances for everyone; empty slots
-        # just write garbage into their own rows (they are re-prefilled later)
+        if self.paged:
+            # grow page lists so every active slot has a page for the
+            # token this tick writes at its own position
+            grew = False
+            for i in active:
+                need = self.slot_pages[i].pages_needed(self.slot_pos[i] + 1)
+                if need:
+                    pages = self.allocator.alloc(need)
+                    if pages is None:
+                        # the admission reservation makes this unreachable
+                        raise RuntimeError(
+                            "paged KV pool exhausted mid-decode — the "
+                            "admission reservation invariant was violated "
+                            "(pages allocated outside the engine?)")
+                    self.slot_pages[i].pages.extend(pages)
+                    self._table[i] = self.slot_pages[i].table_row(self._pmax)
+                    grew = True
+            if grew:
+                self.cache["page_table"] = jnp.asarray(self._table)
+            self.stats["peak_live_pages"] = max(
+                self.stats["peak_live_pages"], self.allocator.live_pages)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(self.last_tok))
         toks = self._sample(np.asarray(logits))
@@ -160,7 +380,33 @@ class ServingEngine:
                     or (eos is not None and tok == eos)
                     or self.slot_pos[i] >= self.scfg.max_len - 1):
                 req.done = True
-                self.slot_req[i] = None
+                self._free_request_slot(i)
+
+    def _admit(self, queue: List[Request]) -> None:
+        """Admit every currently admissible queued request, scanning past
+        blocked entries (no head-of-line blocking: an oversized or
+        page-starved head must not starve slots later entries can fill).
+        FIFO priority is kept — earlier entries get first pick."""
+        i = 0
+        while i < len(queue):
+            req = queue[i]
+            reject = None
+            if len(req.prompt) >= self.scfg.max_len:
+                reject = (f"prompt length {len(req.prompt)} >= "
+                          f"max_len {self.scfg.max_len}")
+            elif self.paged and self._worst_pages(req) > self.num_pages - 1:
+                reject = ("request worst case needs more pages than the "
+                          f"pool holds ({self.num_pages - 1} allocatable)")
+            if reject is not None:
+                req.done = True
+                req.error = reject
+                self.stats["rejected"] += 1
+                queue.pop(i)
+                continue
+            if self.add_request(req):
+                queue.pop(i)
+                continue
+            i += 1
 
     def serve(self, requests: List[Request], max_ticks: int = 10_000
               ) -> Dict[str, Any]:
@@ -170,10 +416,12 @@ class ServingEngine:
         ticks = 0
         while (queue or any(r is not None for r in self.slot_req)) \
                 and ticks < max_ticks:
-            while queue and self.add_request(queue[0]):
-                queue.pop(0)
+            self._admit(queue)
             self.step()
             ticks += 1
         dt = time.time() - t0
+        # live bytes at drain are ~0 by construction (every finished
+        # request returns its pages); the peak is the meaningful figure
         return {"wall_s": dt, **self.stats,
+                "kv_peak_live_bytes": self.kv_cache_peak_live_bytes(),
                 "tok_per_s": self.stats["tokens"] / max(dt, 1e-9)}

@@ -1,0 +1,116 @@
+"""Paged KV-cache block allocator: free-list pages, per-sequence tables.
+
+Host-side bookkeeping for the paged pool in ``kernels/paged_kv.py`` —
+the vLLM-style split where the device holds a flat page pool and this
+module decides which physical page each sequence's logical page maps to.
+
+* ``PageAllocator`` — fixed population of ``num_pages`` pages of
+  ``page_size`` token rows.  Page 0 is reserved as the *trash page*:
+  idle slots and unallocated page-table entries point at it, so device
+  code never needs a "no page" sentinel (reads there are masked by
+  ``seq_lens``; writes are garbage by construction).
+* Pages are refcounted so ``fork`` can share a prefix between sequences
+  (copy-on-write page sharing — the allocator half of prefix caching;
+  the engine-side fork is a ROADMAP follow-on).  ``free`` decrements and
+  only returns a page to the free list when its last owner drops it.
+* ``SlotPages`` — one sequence's page list + grow/seq-len logic; the
+  engine keeps one per slot and mirrors it into the device page table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` rows."""
+    return -(-max(tokens, 0) // page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over a fixed page population (page 0 reserved)."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list keeps recently-freed (cache-warm) pages hot
+        self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self._refs = np.zeros(num_pages, np.int32)
+        self._refs[TRASH_PAGE] = 1          # never allocatable
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        """Allocated pages (excludes the trash page)."""
+        return self.num_pages - 1 - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages (refcount 1 each); None if insufficient —
+        all-or-nothing, so a partially admissible request never strands
+        pages."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._refs[pages] = 1
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; pages return to the free list at
+        refcount 0.  The trash page is silently ignored."""
+        for p in pages:
+            if p == TRASH_PAGE:
+                continue
+            if self._refs[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+
+    def fork(self, pages: List[int]) -> List[int]:
+        """Share ``pages`` with a new owner (prefix sharing): bump each
+        refcount and return the same physical page list.  The caller must
+        copy-on-write before mutating a page whose refcount is > 1."""
+        for p in pages:
+            if p == TRASH_PAGE:
+                continue
+            if self._refs[p] <= 0:
+                raise ValueError(f"fork of unallocated page {p}")
+            self._refs[p] += 1
+        return list(pages)
+
+    def ref_count(self, page: int) -> int:
+        return int(self._refs[page])
+
+
+@dataclasses.dataclass
+class SlotPages:
+    """One sequence's page list (logical order) + growth bookkeeping.
+    Sequence length itself stays the engine's (``slot_pos``) — one source
+    of truth; callers pass the target length to ``pages_needed``."""
+
+    page_size: int
+    pages: List[int] = dataclasses.field(default_factory=list)
+
+    def pages_needed(self, new_len: int) -> int:
+        """Extra pages required to grow to ``new_len`` tokens."""
+        return max(pages_for(new_len, self.page_size) - len(self.pages), 0)
+
+    def table_row(self, pmax: int) -> np.ndarray:
+        """(pmax,) i32 device page-table row (trash-padded)."""
+        row = np.full(pmax, TRASH_PAGE, np.int32)
+        row[: len(self.pages)] = self.pages
+        return row
