@@ -35,13 +35,15 @@ def _entry(name):
         from . import bench_kv_cache as m
     elif name == "paged_kv":
         from . import bench_paged_kv as m
+    elif name == "speculative":
+        from . import bench_speculative as m
     else:
         raise KeyError(name)
     return m
 
 
 ALL = ("table3", "table4", "table5", "table6", "accuracy", "kernels",
-       "kv_cache", "paged_kv", "roofline")
+       "kv_cache", "paged_kv", "speculative", "roofline")
 
 
 def main():
@@ -74,6 +76,9 @@ def main():
             derived = f"max_err={out['max_rel_err']:.1e}"
         elif name == "paged_kv":
             derived = f"live/ring_p8={out['live_vs_ring']['posit8']:.2f}"
+        elif name == "speculative":
+            derived = (f"ident={out['all_identical']};"
+                       f"tgt_steps={out['best_target_steps_per_token']:.2f}")
         csv.append(f"{name},{dt_us:.0f},{derived}")
         print()
     print("\n".join(csv))

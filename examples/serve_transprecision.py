@@ -6,7 +6,10 @@ switched ... without any performance overhead".
 Serves the same request set under three TC policies (posit8 / int8 /
 bf16), switching policy BETWEEN batches at runtime — each policy is just a
 different jit specialization, the software analogue of the posit_en /
-bitwidth control lines.
+bitwidth control lines.  Then: KV-cache transprecision (PR 1), the paged
+KV layout (PR 2), and self-speculative decoding (PR 3: posit8 draft +
+target-precision verify + KV rollback, switching precision WITHIN a
+decoding round).
 
   PYTHONPATH=src python examples/serve_transprecision.py
 """
@@ -90,6 +93,44 @@ def main():
                                             kv_out["ring"])])
     print(f"  greedy agreement paged vs ring: {match:.2f} "
           "(exact by construction)")
+
+    # --- self-speculative decoding (PR 3) ------------------------------
+    # The TALU story end to end: gamma draft tokens per round under a
+    # derived posit8 policy (posit8 weight compute + posit8 KV ring),
+    # then ONE full-precision verify pass scores all gamma+1 positions;
+    # accepted tokens commit, the first rejection rolls the KV cache
+    # back (ring rewind / paged page-free).  Greedy output is
+    # token-identical to the baseline engine — the draft precision only
+    # sets the ACCEPTANCE RATE, i.e. how many target-model steps each
+    # token costs.
+    from repro.serve.speculative import SpeculativeEngine
+    print("\nSelf-speculative decode (draft=posit8 weights+KV, "
+          "target=f32 KV):")
+    base = ServingEngine(cfg, params,
+                         ServeConfig(max_batch=3, max_len=96,
+                                     kv_format="f32"),
+                         policy=get_policy("bf16"))
+    reqs = [Request(uid=i, prompt=p, max_new=12)
+            for i, p in enumerate(prompts)]
+    base.serve(reqs)
+    base_out = [r.out_tokens for r in reqs]
+    for gamma in (2, 4):
+        engine = SpeculativeEngine(cfg, params,
+                                   ServeConfig(max_batch=3, max_len=96,
+                                               kv_format="f32"),
+                                   policy=get_policy("bf16"), gamma=gamma)
+        reqs = [Request(uid=i, prompt=p, max_new=12)
+                for i, p in enumerate(prompts)]
+        stats = engine.serve(reqs)
+        acc = stats["drafts_accepted"] / max(stats["drafts_proposed"], 1)
+        spt = stats["decode_steps"] / max(stats["tokens"]
+                                          - stats["prefills"], 1)
+        ident = [r.out_tokens for r in reqs] == base_out
+        print(f"  gamma={gamma}: acceptance={acc:.2f} "
+              f"target steps/token={spt:.2f} "
+              f"identical to baseline greedy: {ident}")
+    print("  (< 1.0 target steps/token = the expensive datapath runs "
+          "less than once per token)")
 
 
 if __name__ == "__main__":

@@ -167,6 +167,32 @@ def kv_storage(policy: Optional["TCPolicy"]) -> Optional[KVStorage]:
     return None
 
 
+def draft_policy(policy: "TCPolicy", weights_fmt: str = "posit8_2",
+                 kv_format: str = "posit8") -> "TCPolicy":
+    """Derive the low-precision *draft* policy for self-speculative decode.
+
+    The draft pass runs the SAME weights through the TALU's cheap mode:
+    posit8 weight compute and a posit8 KV ring by default — the software
+    analogue of dropping the ALU bitwidth for a throwaway pass and
+    re-raising it for the verify.  The draft cache is always a ring (it is
+    private, rolled back wholesale, and never shared), and layer/node
+    overrides are dropped: the draft is uniformly cheap by construction.
+    """
+    base = get_policy(policy)
+    return dataclasses.replace(
+        base,
+        name=f"{base.name}+draft_{kv_format}",
+        attn_weights=weights_fmt,
+        mlp_weights=weights_fmt,
+        embed_weights=base.embed_weights or "posit16_2",
+        kv_format=kv_format,
+        kv_layout="ring",
+        packed_kv=False,
+        layer_overrides=(),
+        node_overrides=(),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Presets
 # ---------------------------------------------------------------------------

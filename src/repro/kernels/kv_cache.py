@@ -109,9 +109,35 @@ def code_channels(hd: int, fmt: PositFormat, packed: bool = False) -> int:
 # kv_append: encode-on-write ring update (Pallas)
 # ---------------------------------------------------------------------------
 
-def _append_kernel(idx_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref, vs_ref,
-                   kco_ref, kso_ref, vco_ref, vso_ref, *, fmt, packed):
-    del idx_ref, kc_ref, ks_ref, vc_ref, vs_ref  # position consumed by specs
+def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+              fmt: PositFormat, *, packed: bool = False, interpret=None):
+    """Encode-on-write ring append.
+
+    k/v_codes: (B, W, H, Dc) posit codes; k/v_scale: (B, W, H) f32;
+    k/v_new: (B, 1, H, hd) float; pos: int position, scalar (shared) or
+    (B,) per-slot (mod W applied here).  Returns the four updated cache
+    arrays (donated/aliased).  The T=1 case of ``kv_append_rows`` — one
+    kernel to maintain, identical codec by construction."""
+    return kv_append_rows(k_codes, k_scale, v_codes, v_scale, k_new, v_new,
+                          pos, fmt, packed=packed, interpret=interpret)
+
+
+def kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+                  fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle for ``kv_append`` (the T=1 case of
+    ``kv_append_rows_ref``).  ``pos`` scalar (shared) or (B,) per-slot."""
+    return kv_append_rows_ref(k_codes, k_scale, v_codes, v_scale, k_new,
+                              v_new, pos, fmt, packed)
+
+
+# ---------------------------------------------------------------------------
+# kv_append_rows: encode-on-write ring update for a T-token chunk (Pallas)
+# ---------------------------------------------------------------------------
+
+def _append_rows_kernel(idx_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref,
+                        vs_ref, kco_ref, kso_ref, vco_ref, vso_ref, *,
+                        fmt, packed):
+    del idx_ref, kc_ref, ks_ref, vc_ref, vs_ref  # rows consumed by specs
     kc, ks = encode_kv_rows(kn_ref[0, 0, 0], fmt, packed)
     vc, vs = encode_kv_rows(vn_ref[0, 0, 0], fmt, packed)
     kco_ref[0, 0, 0] = kc
@@ -121,40 +147,43 @@ def _append_kernel(idx_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref, vs_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "packed", "interpret"))
-def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
-              fmt: PositFormat, *, packed: bool = False, interpret=None):
-    """Encode-on-write ring append.
+def kv_append_rows(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+                   fmt: PositFormat, *, packed: bool = False, interpret=None):
+    """Encode-on-write ring append of a T-token chunk (speculative verify).
 
-    k/v_codes: (B, W, H, Dc) posit codes; k/v_scale: (B, W, H) f32;
-    k/v_new: (B, 1, H, hd) float; pos: int position, scalar (shared) or
-    (B,) per-slot (mod W applied here).  Returns the four updated cache
-    arrays (donated/aliased)."""
+    Generalizes ``kv_append`` from one row to T consecutive rows per slot:
+    k/v_new are (B, T, H, hd) floats and ``pos`` is the (B,) per-slot start
+    position — token t of slot b lands at ring index (pos[b] + t) mod W.
+    The (B, T) index matrix is a scalar-prefetch operand, so only the
+    written (1, hd) row blocks move between HBM and VMEM and the cache
+    buffers are donated, exactly like the single-row kernel."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     b, w, h, dc = k_codes.shape
-    hd = k_new.shape[-1]
-    idx = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)) % w
+    t, hd = k_new.shape[1], k_new.shape[-1]
+    idx = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :]) % w
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, h),
+        grid=(b, t, h),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, ti, j, s: (i, ti, j, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, ti, j, s: (i, ti, j, 0)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, ti, j, s: (i, s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, ti, j, s: (i, s[i, ti], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, ti, j, s: (i, s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, ti, j, s: (i, s[i, ti], j)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
-            pl.BlockSpec((1, 1, 1, dc), lambda i, j, s: (i, s[i], j, 0)),
-            pl.BlockSpec((1, 1, 1), lambda i, j, s: (i, s[i], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, ti, j, s: (i, s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, ti, j, s: (i, s[i, ti], j)),
+            pl.BlockSpec((1, 1, 1, dc), lambda i, ti, j, s: (i, s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, ti, j, s: (i, s[i, ti], j)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_append_kernel, fmt=fmt, packed=packed),
+        functools.partial(_append_rows_kernel, fmt=fmt, packed=packed),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(k_codes.shape, k_codes.dtype),
@@ -168,24 +197,19 @@ def kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
     )(idx, k_new, v_new, k_codes, k_scale, v_codes, v_scale)
 
 
-def kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
-                  fmt: PositFormat, packed: bool = False):
-    """Pure-jnp oracle for ``kv_append`` (same codec, XLA ring write).
-    ``pos`` may be a scalar (shared) or a (B,) per-slot vector."""
+def kv_append_rows_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new, pos,
+                       fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle for ``kv_append_rows`` (same codec, XLA scatter)."""
     b, w = k_codes.shape[:2]
-    i = jnp.asarray(pos, jnp.int32) % w
-    rows = jnp.arange(b)
+    t = k_new.shape[1]
+    idx = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :]) % w
+    rows = jnp.arange(b)[:, None]
 
     def wr(codes, scale, new):
-        c, s = encode_kv_rows(new, fmt, packed)
-        if i.ndim:                       # per-slot ring positions
-            codes = codes.at[rows, i].set(c[:, 0].astype(codes.dtype))
-            scale = scale.at[rows, i].set(s[:, 0, :, 0])
-            return codes, scale
-        codes = jax.lax.dynamic_update_slice_in_dim(
-            codes, c.astype(codes.dtype), i, axis=1)
-        scale = jax.lax.dynamic_update_slice_in_dim(
-            scale, s[..., 0], i, axis=1)
+        c, s = encode_kv_rows(new, fmt, packed)         # (B, T, H, Dc)
+        codes = codes.at[rows, idx].set(c.astype(codes.dtype))
+        scale = scale.at[rows, idx].set(s[..., 0])
         return codes, scale
 
     kc, ks = wr(k_codes, k_scale, k_new)

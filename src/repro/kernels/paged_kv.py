@@ -53,13 +53,24 @@ from .posit_decode import decode_tile
 def flat_dst_rows(page_table, pos, page_size: int):
     """Per-slot flat pool row for writing the token at ``pos``.
 
-    page_table: (B, Pmax) i32; pos: (B,) i32.  The logical page index is
-    clamped so idle slots (whose pos may run past Pmax * ps) still map to
-    a valid row — their table entries are 0, the trash page."""
+    page_table: (B, Pmax) i32; pos: (B,) i32.  The T=1 case of
+    ``flat_dst_rows_chunk`` (logical page indices clamped, so idle slots
+    whose pos runs past Pmax * ps still map to trash-page rows)."""
+    return flat_dst_rows_chunk(page_table, pos, 1, page_size)[:, 0]
+
+
+def flat_dst_rows_chunk(page_table, pos, t: int, page_size: int):
+    """(B, T) flat pool rows for a T-token chunk starting at ``pos``.
+
+    Row [b, i] addresses the token at position pos[b] + i (speculative
+    verify writes the whole chunk before scoring it).  Logical page
+    indices are clamped exactly like ``flat_dst_rows``, so idle slots
+    (all-trash tables) keep writing benign garbage into page 0."""
     pmax = page_table.shape[1]
-    pos = jnp.asarray(pos, jnp.int32)
+    pos = (jnp.asarray(pos, jnp.int32)[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :])        # (B, T)
     lpi = jnp.clip(pos // page_size, 0, pmax - 1)
-    phys = jnp.take_along_axis(page_table, lpi[:, None], axis=1)[:, 0]
+    phys = jnp.take_along_axis(page_table, lpi, axis=1)
     return phys * page_size + pos % page_size
 
 
@@ -67,10 +78,39 @@ def flat_dst_rows(page_table, pos, page_size: int):
 # paged_kv_append: encode-on-write into table-addressed pool rows (Pallas)
 # ---------------------------------------------------------------------------
 
-def _paged_append_kernel(dst_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref,
-                         vs_ref, kco_ref, kso_ref, vco_ref, vso_ref, *,
-                         fmt, packed):
-    del dst_ref, kc_ref, ks_ref, vc_ref, vs_ref  # row consumed by the specs
+def paged_kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, dst,
+                    fmt: PositFormat, *, packed: bool = False,
+                    interpret=None):
+    """Encode-on-write append into the paged pool.
+
+    k/v_codes: (R, nkv, Dc) pool; k/v_scale: (R, nkv) f32; k/v_new:
+    (B, 1, nkv, hd) float; dst: (B,) i32 flat pool rows (``flat_dst_rows``).
+    Returns the four updated pool arrays (donated/aliased).  The T=1 case
+    of ``paged_kv_append_rows`` — one kernel to maintain, identical codec
+    by construction."""
+    dst = jnp.asarray(dst, jnp.int32).reshape(k_new.shape[0], 1)
+    return paged_kv_append_rows(k_codes, k_scale, v_codes, v_scale, k_new,
+                                v_new, dst, fmt, packed=packed,
+                                interpret=interpret)
+
+
+def paged_kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new,
+                        dst, fmt: PositFormat, packed: bool = False):
+    """Pure-jnp oracle for ``paged_kv_append`` (the T=1 case of
+    ``paged_kv_append_rows_ref``)."""
+    dst = jnp.asarray(dst, jnp.int32).reshape(k_new.shape[0], 1)
+    return paged_kv_append_rows_ref(k_codes, k_scale, v_codes, v_scale,
+                                    k_new, v_new, dst, fmt, packed)
+
+
+# ---------------------------------------------------------------------------
+# paged_kv_append_rows: chunked encode-on-write into pool rows (Pallas)
+# ---------------------------------------------------------------------------
+
+def _paged_append_rows_kernel(dst_ref, kn_ref, vn_ref, kc_ref, ks_ref,
+                              vc_ref, vs_ref, kco_ref, kso_ref, vco_ref,
+                              vso_ref, *, fmt, packed):
+    del dst_ref, kc_ref, ks_ref, vc_ref, vs_ref  # rows consumed by the specs
     kc, ks = encode_kv_rows(kn_ref[0, 0, 0], fmt, packed)
     vc, vs = encode_kv_rows(vn_ref[0, 0, 0], fmt, packed)
     kco_ref[0, 0] = kc
@@ -80,42 +120,42 @@ def _paged_append_kernel(dst_ref, kn_ref, vn_ref, kc_ref, ks_ref, vc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "packed", "interpret"))
-def paged_kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, dst,
-                    fmt: PositFormat, *, packed: bool = False,
-                    interpret=None):
-    """Encode-on-write append into the paged pool.
+def paged_kv_append_rows(k_codes, k_scale, v_codes, v_scale, k_new, v_new,
+                         dst, fmt: PositFormat, *, packed: bool = False,
+                         interpret=None):
+    """Encode-on-write append of a T-token chunk into the paged pool.
 
-    k/v_codes: (R, nkv, Dc) pool; k/v_scale: (R, nkv) f32; k/v_new:
-    (B, 1, nkv, hd) float; dst: (B,) i32 flat pool rows (``flat_dst_rows``).
-    Returns the four updated pool arrays (donated/aliased).  Two live
-    slots never share a row; idle slots may collide on the trash page,
-    where the sequential grid makes the write benign garbage."""
+    Generalizes ``paged_kv_append`` from one row to T rows per slot:
+    k/v_new are (B, T, nkv, hd) floats and ``dst`` is the (B, T) flat-row
+    matrix from ``flat_dst_rows_chunk``.  Live slots never share rows;
+    idle slots may collide on the trash page, where the sequential grid
+    makes the last write win — benign garbage either way."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    b, _, h, hd = k_new.shape
+    b, t, h, hd = k_new.shape
     dc = k_codes.shape[-1]
-    dst = jnp.asarray(dst, jnp.int32).reshape(b)
+    dst = jnp.asarray(dst, jnp.int32).reshape(b, t)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, h),
+        grid=(b, t, h),
         in_specs=[
-            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, 1, hd), lambda i, j, s: (i, 0, j, 0)),
-            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
-            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, ti, j, s: (i, ti, j, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda i, ti, j, s: (i, ti, j, 0)),
+            pl.BlockSpec((1, 1, dc), lambda i, ti, j, s: (s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, ti, j, s: (s[i, ti], j)),
+            pl.BlockSpec((1, 1, dc), lambda i, ti, j, s: (s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, ti, j, s: (s[i, ti], j)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
-            pl.BlockSpec((1, 1, dc), lambda i, j, s: (s[i], j, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, s: (s[i], j)),
+            pl.BlockSpec((1, 1, dc), lambda i, ti, j, s: (s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, ti, j, s: (s[i, ti], j)),
+            pl.BlockSpec((1, 1, dc), lambda i, ti, j, s: (s[i, ti], j, 0)),
+            pl.BlockSpec((1, 1), lambda i, ti, j, s: (s[i, ti], j)),
         ],
     )
     return pl.pallas_call(
-        functools.partial(_paged_append_kernel, fmt=fmt, packed=packed),
+        functools.partial(_paged_append_rows_kernel, fmt=fmt, packed=packed),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(k_codes.shape, k_codes.dtype),
@@ -129,15 +169,18 @@ def paged_kv_append(k_codes, k_scale, v_codes, v_scale, k_new, v_new, dst,
     )(dst, k_new, v_new, k_codes, k_scale, v_codes, v_scale)
 
 
-def paged_kv_append_ref(k_codes, k_scale, v_codes, v_scale, k_new, v_new,
-                        dst, fmt: PositFormat, packed: bool = False):
-    """Pure-jnp oracle for ``paged_kv_append`` (same codec, XLA scatter)."""
-    dst = jnp.asarray(dst, jnp.int32)
+def paged_kv_append_rows_ref(k_codes, k_scale, v_codes, v_scale, k_new,
+                             v_new, dst, fmt: PositFormat,
+                             packed: bool = False):
+    """Pure-jnp oracle for ``paged_kv_append_rows`` (same codec, scatter)."""
+    b, t = k_new.shape[:2]
+    dst = jnp.asarray(dst, jnp.int32).reshape(b * t)
 
     def wr(codes, scale, new):
-        c, s = encode_kv_rows(new[:, 0], fmt, packed)   # (B, nkv, Dc)
-        codes = codes.at[dst].set(c.astype(codes.dtype))
-        scale = scale.at[dst].set(s[..., 0])
+        c, s = encode_kv_rows(new, fmt, packed)          # (B, T, nkv, Dc)
+        codes = codes.at[dst].set(
+            c.reshape((b * t,) + c.shape[2:]).astype(codes.dtype))
+        scale = scale.at[dst].set(s[..., 0].reshape(b * t, -1))
         return codes, scale
 
     kc, ks = wr(k_codes, k_scale, k_new)

@@ -39,19 +39,33 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged layout: pool size incl. trash page "
                          "(None: full reservation)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative greedy decode: gamma posit8 "
+                         "draft steps + one target-precision verify per "
+                         "round (token-identical to baseline greedy)")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="speculative: draft tokens per round")
+    ap.add_argument("--draft-kv-format", default="posit8",
+                    choices=["f32", "bf16", "posit16", "posit8", "posit4"],
+                    help="speculative: draft-pass KV storage format")
     args = ap.parse_args()
+
+    if args.speculative and args.temperature > 0:
+        ap.error("--speculative is greedy-only (temperature 0)")
 
     cfg = get_config(args.arch, smoke=not args.full)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params,
-                           ServeConfig(max_batch=args.batch,
-                                       max_len=args.max_len,
-                                       temperature=args.temperature,
-                                       kv_format=args.kv_format,
-                                       kv_layout=args.kv_layout,
-                                       page_size=args.page_size,
-                                       num_pages=args.num_pages),
-                           policy=args.policy)
+    scfg = ServeConfig(max_batch=args.batch, max_len=args.max_len,
+                       temperature=args.temperature,
+                       kv_format=args.kv_format, kv_layout=args.kv_layout,
+                       page_size=args.page_size, num_pages=args.num_pages)
+    if args.speculative:
+        from ..serve.speculative import SpeculativeEngine
+        engine = SpeculativeEngine(cfg, params, scfg, policy=args.policy,
+                                   gamma=args.gamma,
+                                   draft_kv_format=args.draft_kv_format)
+    else:
+        engine = ServingEngine(cfg, params, scfg, policy=args.policy)
     rng = np.random.default_rng(0)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, rng.integers(4, 17)),
@@ -61,6 +75,12 @@ def main():
     for r in reqs[:4]:
         print(f"req {r.uid}: {len(r.out_tokens)} tokens ->",
               r.out_tokens[:10], "...")
+    if args.speculative:
+        acc = stats["drafts_accepted"] / max(stats["drafts_proposed"], 1)
+        spt = stats["decode_steps"] / max(stats["tokens"]
+                                          - stats["prefills"], 1)
+        print(f"speculative: gamma={args.gamma} acceptance={acc:.2f} "
+              f"target steps/token={spt:.2f}")
     print("stats:", {k: (round(v, 2) if isinstance(v, float) else v)
                      for k, v in stats.items()})
 

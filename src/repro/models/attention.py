@@ -250,18 +250,37 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
     valid entries, scalar (shared) or (B,) per-slot.  ``ring_offset``
     marks the logical start for sliding-window ring buffers.  Returns
     (B, 1, nh, hd).
+
+    Defined as the T=1 case of ``chunk_decode_attention`` so the
+    single-token decode path and the speculative verify path stay
+    bit-identical BY CONSTRUCTION — the invariant speculative rollback
+    correctness rests on.
+    """
+    b = q.shape[0]
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
+    return chunk_decode_attention(q, k_cache, v_cache, cl[:, None] - 1)
+
+
+def chunk_decode_attention(q, k_cache, v_cache, qpos):
+    """T-token causal attention against a cache (speculative verify).
+
+    q: (B, T, nh, hd); k/v_cache: (B, W, nkv, hd); qpos: (B, T) absolute
+    position of each query token (its K/V row is already in the cache).
+    Query t sees cache rows < qpos[b, t] + 1, evaluated per query row, so
+    scoring a chunk is bit-identical to scoring its tokens one step at a
+    time (rejected-draft rows beyond a query's position mask to exact
+    zeros).  ``decode_attention`` is the T=1 case.  Returns (B, T, nh, hd).
     """
     b, w, nkv, hd = k_cache.shape
-    nh = q.shape[2]
+    t, nh = q.shape[1], q.shape[2]
     grp = nh // nkv
-    qg = q.reshape(b, 1, nkv, grp, hd) * (hd ** -0.5)
+    qg = q.reshape(b, t, nkv, grp, hd) * (hd ** -0.5)
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
-    cl = jnp.broadcast_to(jnp.asarray(cache_len), (b,))
-    valid = jnp.arange(w)[None, :] < cl[:, None]
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    valid = jnp.arange(w)[None, None, :] < (jnp.asarray(qpos) + 1)[:, :, None]
+    scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", p, v_cache)
-    return out.reshape(b, 1, nh, hd)
+    return out.reshape(b, t, nh, hd)
 
 
 def decode_attention_packed(q, k_codes, v_codes, cache_len, *, k_scale,

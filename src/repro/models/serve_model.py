@@ -389,6 +389,162 @@ def decode_step(params, cache, tokens, cfg: ModelCfg,
 
 
 # ---------------------------------------------------------------------------
+# verify_step: multi-token chunk decode (speculative verify)
+# ---------------------------------------------------------------------------
+
+def _ring_write_rows(buf, val, pos):
+    """buf: (B, W, ...); val: (B, T, ...); row t of slot b lands at
+    (pos[b] + t) mod W.  ``pos`` is the (B,) per-slot start position."""
+    b, w = buf.shape[:2]
+    t = val.shape[1]
+    idx = (jnp.asarray(pos, jnp.int32)[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :]) % w
+    return buf.at[jnp.arange(b)[:, None], idx].set(val.astype(buf.dtype))
+
+
+def _ring_append_rows_packed(c, kp, vp, pos, spec: KVStorage):
+    """Chunked encode-on-write ring append (Pallas on accelerators,
+    bit-identical pure-jnp reference on CPU)."""
+    args = (c["k"], c["k_scale"], c["v"], c["v_scale"],
+            kp.astype(jnp.float32), vp.astype(jnp.float32), pos)
+    if jax.default_backend() == "cpu":
+        return kv_kernels.kv_append_rows_ref(*args, spec.fmt, spec.packed)
+    return kv_kernels.kv_append_rows(*args, spec.fmt, packed=spec.packed)
+
+
+def _paged_append_rows_packed(c, kp, vp, dst, spec: KVStorage):
+    """Chunked encode-on-write append into the paged pool."""
+    args = (c["k"], c["k_scale"], c["v"], c["v_scale"],
+            kp.astype(jnp.float32), vp.astype(jnp.float32), dst)
+    if jax.default_backend() == "cpu":
+        return paged_kernels.paged_kv_append_rows_ref(*args, spec.fmt,
+                                                      spec.packed)
+    return paged_kernels.paged_kv_append_rows(*args, spec.fmt,
+                                              packed=spec.packed)
+
+
+def _attn_verify(p, c, x, cfg, policy, pos, page_table=None):
+    """One attention layer of the T-token verify pass.
+
+    Appends the chunk's T K/V rows (positions pos..pos+T-1 per slot) to
+    the cache, then runs chunked causal attention against it.  Every
+    per-token operation reuses the decode-path building blocks on a T
+    axis, so the logits (and the cache rows written) are bit-identical to
+    feeding the chunk through ``decode_step`` one token at a time on the
+    CPU/reference backend (the one CI pins).  On accelerators the
+    single-token path reads through the fused Pallas kernels while this
+    chunk path reads through gather+decode XLA attention — a different
+    summation order; the fused chunk kernel is a ROADMAP follow-on."""
+    b, t = x.shape[:2]
+    spec = _kv_spec(policy)
+    posit_kv = spec is not None and spec.is_posit
+    paged = page_table is not None
+    pos = jnp.asarray(pos)
+    h = rms_norm(x, p["ln"])
+    qp, kp, vp = _qkv(p, h, cfg, policy)
+    posv = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
+    cos, sin = _rope_cs(cfg, posv)
+    qp = apply_rope(qp, cos, sin)
+    kp = apply_rope(kp, cos, sin)
+    new_c = dict(c)
+    if paged:
+        ps = policy.kv_page_size
+        dst = paged_kernels.flat_dst_rows_chunk(page_table, pos, t, ps)
+        if posit_kv:
+            kc, ks, vc, vs = _paged_append_rows_packed(c, kp, vp, dst, spec)
+            k_read = paged_kernels.gather_decode_pages(
+                kc, ks, page_table, ps, spec.fmt, spec.packed)
+            v_read = paged_kernels.gather_decode_pages(
+                vc, vs, page_table, ps, spec.fmt, spec.packed)
+            new_c.update(k=kc, v=vc, k_scale=ks, v_scale=vs)
+        else:
+            kc = c["k"].at[dst].set(kp.astype(c["k"].dtype))
+            vc = c["v"].at[dst].set(vp.astype(c["v"].dtype))
+            k_read = paged_kernels.gather_pages(kc, page_table, ps)
+            v_read = paged_kernels.gather_pages(vc, page_table, ps)
+            new_c.update(k=kc, v=vc)
+    elif posit_kv:
+        kc, ks, vc, vs = _ring_append_rows_packed(c, kp, vp, pos, spec)
+        k_read = kv_kernels.decode_kv_rows(kc, ks[..., None], spec.fmt,
+                                           spec.packed)
+        v_read = kv_kernels.decode_kv_rows(vc, vs[..., None], spec.fmt,
+                                           spec.packed)
+        new_c.update(k=kc, v=vc, k_scale=ks, v_scale=vs)
+    else:
+        kc = _ring_write_rows(c["k"], kp, pos)
+        vc = _ring_write_rows(c["v"], vp, pos)
+        k_read, v_read = kc, vc
+        new_c.update(k=kc, v=vc)
+    ao = attention.chunk_decode_attention(qp, k_read, v_read, posv)
+    x = x + jnp.einsum("bsk,kd->bsd", ao.reshape(b, t, -1),
+                       _qw(policy, "attn_weights")(p["wo"])).astype(x.dtype)
+    h2 = rms_norm(x, p["ln2"])
+    return x + _mlp(p, h2, cfg, policy), new_c
+
+
+def verify_step(params, cache, tokens, cfg: ModelCfg,
+                policy: TCPolicy = BF16):
+    """Multi-token verify pass: decode a (B, T) token chunk in ONE model
+    call with per-slot positions — the target-precision half of
+    self-speculative decoding.
+
+    tokens: (B, T) int32 — token t of slot b is scored *and* its K/V row
+    written at position cache["pos"][b] + t.  Returns (logits
+    (B, T, vocab_pad), new_cache) with ``pos`` advanced by T; the caller
+    commits accepted tokens and rolls the cache back past the first
+    rejection (``serve/speculative.py``).
+
+    Supports attention-only stacks (every token writes exactly one cache
+    row, so rollback is a row rewind); recurrent/SSM/MoE/audio families
+    would need state snapshots and are rejected.
+    """
+    if any(bt != "attn" for bt in cfg.block_types):
+        raise ValueError("verify_step supports attention-only stacks; "
+                         f"{cfg.name} has blocks {set(cfg.block_types)}")
+    if cfg.family == "moe":
+        raise ValueError("verify_step does not support MoE stacks (chunked "
+                         "dispatch changes capacity routing vs per-token)")
+    if cfg.family == "audio":
+        raise ValueError("verify_step does not support encoder-decoder "
+                         "stacks (no cross-attention in the chunk path)")
+    if cfg.window:
+        raise ValueError("verify_step does not support sliding-window "
+                         "attention (rollback assumes no ring wraparound)")
+    b, t = tokens.shape
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32), (b,))
+    page_table = cache.get("page_table")
+    emb = policy.quantize_weight(params["embed"], "embed_weights")
+    x = emb[tokens].astype(cfg.dtype)
+
+    def scan_body(carry, pc):
+        x = carry
+        pparams, pcache = pc
+        new_caches = []
+        for i, _ in enumerate(cfg.period):
+            x, nc = _attn_verify(pparams[i], pcache[i], x, cfg, policy, pos,
+                                 page_table=page_table)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["blocks"]))
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_blocks
+    if cfg.n_tail:
+        new_tail = []
+        for p_i, c_i in zip(params["tail"], cache["tail"]):
+            x, nc = _attn_verify(p_i, c_i, x, cfg, policy, pos,
+                                 page_table=page_table)
+            new_tail.append(nc)
+        new_cache["tail"] = tuple(new_tail)
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embed else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    new_cache["pos"] = cache["pos"] + t
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
 

@@ -1,3 +1,4 @@
 from .engine import Request, ServeConfig, ServingEngine
 from .distributed import distributed_decode_attention, make_distributed_decode_step
 from .paged import PageAllocator, SlotPages, pages_for
+from .speculative import SpeculativeEngine

@@ -77,6 +77,10 @@ class Request:
     uid: int
     prompt: np.ndarray           # (S,) int32
     max_new: int = 32
+    # per-request sampling temperature; None inherits ServeConfig's.
+    # 0 (or an inherited 0) means greedy — the speculative path keys its
+    # greedy-only admission check off this same resolved value.
+    temperature: Optional[float] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the request is rejected
@@ -159,13 +163,17 @@ class ServingEngine:
                       "kv_cache_bytes": self.kv_cache_bytes()}
 
     # ---- cache footprint ----
-    def _kv_bytes(self, pool_frac: float = 1.0) -> int:
+    def _kv_bytes(self, pool_frac: float = 1.0, cache=None) -> int:
         """Sum KV-cache leaf bytes across any cache layout by leaf name
         (``k``/``v``/scales/cross-K/V at any depth — no layout-specific
         key assumptions).  ``pool_frac`` scales page-pool leaves (paged
-        layout) by an allocated-page fraction; cross-K/V does not page."""
+        layout) by an allocated-page fraction; cross-K/V does not page.
+        ``cache`` defaults to the engine's target cache (the speculative
+        engine also passes its ring-layout draft cache, where
+        ``pool_frac`` must stay 1.0)."""
 
         total = 0.0
+        paged = self.paged and cache is None
 
         def visit(kp, leaf):
             nonlocal total
@@ -173,11 +181,12 @@ class ServingEngine:
             if name not in _KV_LEAF_NAMES or not hasattr(leaf, "dtype"):
                 return
             nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
-            if self.paged and name in _POOL_LEAF_NAMES:
+            if paged and name in _POOL_LEAF_NAMES:
                 nbytes *= pool_frac
             total += nbytes
 
-        jax.tree_util.tree_map_with_path(visit, dict(self.cache))
+        jax.tree_util.tree_map_with_path(
+            visit, dict(self.cache if cache is None else cache))
         return int(total)
 
     def kv_cache_bytes(self) -> int:
@@ -214,14 +223,16 @@ class ServingEngine:
         ``dynamic_update_slice``; with the paged layout the prompt's K/V
         rows are scattered into the slot's pool pages at the
         ``dst_rows`` flat rows instead (codes are codec-identical between
-        the ring prefill and the pool, so this is a pure relayout)."""
+        the ring prefill and the pool, so this is a pure relayout).
+        ``dst_rows is None`` selects the ring semantics even on a paged
+        engine — the speculative draft cache is always a ring."""
         s_len = dst_rows.shape[0] if dst_rows is not None else 0
 
         def merge_block(dstb, srcb, stacked):
             out = {}
             for name, d in dstb.items():
                 s = srcb[name]
-                if self.paged and name in _POOL_LEAF_NAMES:
+                if dst_rows is not None and name in _POOL_LEAF_NAMES:
                     if stacked:            # (P, R, ...) <- (P, 1, W, ...)
                         rows = s[:, 0, :s_len]
                         out[name] = d.at[:, dst_rows].set(rows.astype(d.dtype))
@@ -292,7 +303,8 @@ class ServingEngine:
                                  jnp.asarray(slot, jnp.int32), dst_rows)
         self.slot_req[slot] = req
         self.slot_pos[slot] = s_len
-        self.last_tok[slot, 0] = int(self._sample(np.asarray(logits))[0])
+        self.last_tok[slot, 0] = int(self._sample(
+            np.asarray(logits), [self._req_temp(req)])[0])
         req.out_tokens.append(int(self.last_tok[slot, 0]))
         self.stats["prefills"] += 1
         self.stats["tokens"] += 1
@@ -329,14 +341,32 @@ class ServingEngine:
             # park the idle slot's write position on the trash page
             self.cache["pos"] = self.cache["pos"].at[slot].set(0)
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray:
+    def _req_temp(self, req: Request) -> float:
+        """Resolved sampling temperature for ``req`` (per-request override
+        falls back to the engine-wide default)."""
+        return (self.scfg.temperature if req.temperature is None
+                else req.temperature)
+
+    def _sample(self, logits: np.ndarray,
+                temps: Optional[np.ndarray] = None) -> np.ndarray:
+        """Sample next tokens row-wise.  ``temps`` is a per-row temperature
+        vector (None = the engine-wide default for every row); rows at
+        temperature <= 0 are greedy, the rest are softmax samples at their
+        own temperature."""
         logits = logits[..., : self.cfg.vocab]
-        if self.scfg.temperature <= 0:
-            return logits.argmax(-1)
-        p = jax.nn.softmax(jnp.asarray(logits) / self.scfg.temperature, -1)
+        greedy = logits.argmax(-1)
+        if temps is None:
+            temps = np.full(greedy.shape, self.scfg.temperature)
+        temps = np.broadcast_to(np.asarray(temps, np.float32), greedy.shape)
+        hot = temps > 0
+        if not hot.any():
+            return greedy
+        t = np.where(hot, temps, 1.0)[..., None]
+        p = jax.nn.softmax(jnp.asarray(logits) / t, -1)
         c = np.cumsum(np.asarray(p), -1)
         u = self._rng.random(c.shape[:-1] + (1,))
-        return (c < u).sum(-1)
+        sampled = (c < u).sum(-1)
+        return np.where(hot, sampled, greedy)
 
     # ---- one decode tick for the whole batch ----
     def step(self):
@@ -366,7 +396,9 @@ class ServingEngine:
                 self.stats["peak_live_pages"], self.allocator.live_pages)
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(self.last_tok))
-        toks = self._sample(np.asarray(logits))
+        temps = np.asarray([0.0 if r is None else self._req_temp(r)
+                            for r in self.slot_req], np.float32)
+        toks = self._sample(np.asarray(logits), temps)
         self.stats["decode_steps"] += 1
         for i in active:
             req = self.slot_req[i]
@@ -382,6 +414,18 @@ class ServingEngine:
                 req.done = True
                 self._free_request_slot(i)
 
+    def _reject_reason(self, req: Request) -> Optional[str]:
+        """Why ``req`` can NEVER be admitted (None = admissible once a
+        slot/pages free up).  Subclasses add checks (the speculative
+        engine needs chunk headroom and greedy sampling)."""
+        if len(req.prompt) >= self.scfg.max_len:
+            return (f"prompt length {len(req.prompt)} >= "
+                    f"max_len {self.scfg.max_len}")
+        if self.paged and self._worst_pages(req) > self.num_pages - 1:
+            return ("request worst case needs more pages than the "
+                    f"pool holds ({self.num_pages - 1} allocatable)")
+        return None
+
     def _admit(self, queue: List[Request]) -> None:
         """Admit every currently admissible queued request, scanning past
         blocked entries (no head-of-line blocking: an oversized or
@@ -390,13 +434,7 @@ class ServingEngine:
         i = 0
         while i < len(queue):
             req = queue[i]
-            reject = None
-            if len(req.prompt) >= self.scfg.max_len:
-                reject = (f"prompt length {len(req.prompt)} >= "
-                          f"max_len {self.scfg.max_len}")
-            elif self.paged and self._worst_pages(req) > self.num_pages - 1:
-                reject = ("request worst case needs more pages than the "
-                          f"pool holds ({self.num_pages - 1} allocatable)")
+            reject = self._reject_reason(req)
             if reject is not None:
                 req.done = True
                 req.error = reject

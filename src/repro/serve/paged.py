@@ -19,6 +19,7 @@ module decides which physical page each sequence's logical page maps to.
 from __future__ import annotations
 
 import dataclasses
+from collections import Counter
 from typing import List, Optional
 
 import numpy as np
@@ -68,14 +69,34 @@ class PageAllocator:
         self._refs[pages] = 1
         return pages
 
+    def _check_pages(self, pages: List[int], op: str) -> None:
+        """Validate a page list BEFORE mutating any state, so an invalid
+        call raises a clear error and leaves the free list untouched
+        (partial mutation is how free lists get corrupted).  Catches:
+        out-of-range ids (negative ids would silently wrap under numpy
+        indexing), the reserved trash page 0, and pages whose refcount
+        cannot cover the requested drops (double free / fork-after-free),
+        including duplicates within one call."""
+        for p, n in Counter(pages).items():
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"{op} of out-of-range page {p} "
+                                 f"(pool holds {self.num_pages})")
+            if p == TRASH_PAGE:
+                raise ValueError(f"{op} of reserved trash page 0")
+            if self._refs[p] <= 0:
+                raise ValueError(
+                    f"{op} of page {p} that is not allocated "
+                    f"({'double free' if op == 'free' else 'freed page'})")
+            if op == "free" and self._refs[p] < n:
+                raise ValueError(f"double free of page {p} "
+                                 f"({n} drops, refcount {self._refs[p]})")
+
     def free(self, pages: List[int]) -> None:
         """Drop one reference per page; pages return to the free list at
-        refcount 0.  The trash page is silently ignored."""
+        refcount 0.  All-or-nothing: an invalid list (double free, trash
+        page, out of range) raises before any refcount moves."""
+        self._check_pages(pages, "free")
         for p in pages:
-            if p == TRASH_PAGE:
-                continue
-            if self._refs[p] <= 0:
-                raise ValueError(f"double free of page {p}")
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 self._free.append(p)
@@ -83,12 +104,11 @@ class PageAllocator:
     def fork(self, pages: List[int]) -> List[int]:
         """Share ``pages`` with a new owner (prefix sharing): bump each
         refcount and return the same physical page list.  The caller must
-        copy-on-write before mutating a page whose refcount is > 1."""
+        copy-on-write before mutating a page whose refcount is > 1.
+        All-or-nothing: forking a freed / trash / out-of-range page raises
+        before any refcount moves."""
+        self._check_pages(pages, "fork")
         for p in pages:
-            if p == TRASH_PAGE:
-                continue
-            if self._refs[p] <= 0:
-                raise ValueError(f"fork of unallocated page {p}")
             self._refs[p] += 1
         return list(pages)
 

@@ -1,0 +1,383 @@
+"""Transprecision self-speculative decoding: posit8 draft, target verify.
+
+The paper's TALU switches precision at runtime on ONE datapath; the
+serving-side analogue is to run the SAME weights twice per chunk at two
+precisions: ``gamma`` cheap autoregressive *draft* steps under a derived
+low-precision policy (posit8 weight compute + posit8 KV ring by default,
+``core.transprecision.draft_policy``), then ONE *verify* pass under the
+full-precision target policy that scores all gamma+1 chunk positions at
+once (``models.serve_model.verify_step``).  Draft tokens that match the
+target's greedy choice commit; the first mismatch yields the target's own
+token as a free bonus, and the speculatively written K/V rows past the
+commit point are **rolled back**:
+
+* ring layout — rewind the per-slot ``pos`` vector and scrub the
+  rolled-back code/scale rows to their init values, so the cache is
+  bit-identical to one that never drafted;
+* paged layout — truncate the slot's page list to the committed length,
+  return orphaned pages through the refcounted allocator, and scrub the
+  rolled-back pool rows.
+
+Because the verify pass evaluates the exact decode-path math per token
+(``chunk_decode_attention`` masks rejected rows to exact zeros), greedy
+speculative decode emits token-for-token the same stream as baseline
+greedy decode — the draft precision only moves the ACCEPTANCE RATE, i.e.
+how many target-model steps each emitted token costs, never the output.
+
+Draft-cache lifecycle: the draft ring mirrors the committed prefix.  When
+every draft in a round is accepted the draft cache is one committed row
+short (the last draft token was never fed through the draft model); that
+slot's next round spends its first draft step catching up (output
+discarded) and proposes gamma-1 tokens instead of gamma.  Lag never
+exceeds one row.
+
+Known boundary semantics (vs the baseline engine):
+
+* near the CACHE cap a verify chunk needs gamma+1 rows of headroom, so a
+  slot finishes once ``slot_pos > max_len - (gamma+1)`` — up to gamma
+  tokens earlier than baseline's ``max_len - 1`` stop.  Streams are
+  token-identical whenever generation is ``max_new``-bound (the normal
+  serving regime); cap-truncated requests end a little shorter.  A
+  dynamic chunk shrink for the last rounds is a ROADMAP follow-on.
+* stream identity is bit-exact on the CPU/reference backend (what CI
+  pins).  On accelerators the baseline decode reads through the fused
+  Pallas kernels while the verify chunk reads through gather+decode XLA
+  attention — different summation orders, so near-tied logits could in
+  principle argmax differently until the fused chunk-verify kernel
+  (ROADMAP) lands.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.transprecision import BF16, TCPolicy, draft_policy
+from ..models import lm
+from ..models.serve_model import (decode_step, init_cache, prefill,
+                                  verify_step)
+from .engine import Request, ServeConfig, ServingEngine
+from .paged import pages_for
+
+_SCRUB_LEAVES = ("k", "v", "k_scale", "v_scale")
+
+
+def rollback_ring_cache(cache, new_pos, old_pos):
+    """Rewind a ring-layout cache: set ``pos`` to ``new_pos`` (B,) and
+    scrub every attention K/V row in [new_pos, old_pos) back to its init
+    value (codes/floats 0, scales 1.0) — bit-identical to a cache that
+    never wrote those rows.  No wraparound: row index == position, which
+    ``verify_step`` guarantees by refusing sliding-window configs."""
+    new = jnp.asarray(new_pos, jnp.int32)
+    old = jnp.asarray(old_pos, jnp.int32)
+
+    def scrub_block(blk, stacked):
+        # blocks leaves carry a leading period-stack axis (P, B, W, ...);
+        # tail leaves are plain (B, W, ...)
+        out = dict(blk)
+        for name in _SCRUB_LEAVES:
+            if name not in blk:
+                continue
+            leaf = blk[name]
+            w = leaf.shape[2 if stacked else 1]
+            ar = jnp.arange(w, dtype=jnp.int32)[None, :]
+            mask = (ar >= new[:, None]) & (ar < old[:, None])   # (B, W)
+            lead = (1,) if stacked else ()
+            trail = (1,) * (leaf.ndim - len(lead) - 2)
+            mask = mask.reshape(lead + mask.shape + trail)
+            init = 1.0 if name.endswith("_scale") else 0
+            out[name] = jnp.where(mask, jnp.asarray(init, leaf.dtype), leaf)
+        return out
+
+    new_cache = dict(cache)
+    new_cache["blocks"] = tuple(scrub_block(b, True) for b in cache["blocks"])
+    if "tail" in cache:
+        new_cache["tail"] = tuple(scrub_block(b, False)
+                                  for b in cache["tail"])
+    new_cache["pos"] = new
+    return new_cache
+
+
+def rollback_paged_cache(cache, new_pos, scrub_rows):
+    """Rewind a paged-layout cache: set ``pos`` to ``new_pos`` (B,) and
+    scrub the flat pool rows in ``scrub_rows`` (fixed-size (N,) i32,
+    padded with trash row 0 — writes there are benign by construction)
+    back to init values.  Page-table truncation and allocator frees are
+    the engine's host-side half of the rollback."""
+    rows = jnp.asarray(scrub_rows, jnp.int32)
+
+    def scrub_block(blk, stacked):
+        # blocks pool leaves carry a leading period-stack axis (P, R, ...);
+        # tail leaves are plain (R, ...)
+        out = dict(blk)
+        for name in _SCRUB_LEAVES:
+            if name not in blk:
+                continue
+            leaf = blk[name]
+            init = jnp.asarray(1.0 if name.endswith("_scale") else 0,
+                               leaf.dtype)
+            out[name] = (leaf.at[:, rows].set(init) if stacked
+                         else leaf.at[rows].set(init))
+        return out
+
+    new_cache = dict(cache)
+    new_cache["blocks"] = tuple(scrub_block(b, True) for b in cache["blocks"])
+    if "tail" in cache:
+        new_cache["tail"] = tuple(scrub_block(b, False)
+                                  for b in cache["tail"])
+    new_cache["pos"] = jnp.asarray(new_pos, jnp.int32)
+    return new_cache
+
+
+class SpeculativeEngine(ServingEngine):
+    """Continuous-batching engine with self-speculative greedy decode.
+
+    Per round (one ``step()``): gamma lockstep draft ``decode_step``s
+    under the draft policy, one ``verify_step`` under the target policy,
+    per-slot acceptance, KV rollback.  Greedy-only: requests whose
+    resolved temperature is > 0 are rejected at admission (acceptance
+    compares argmax streams; stochastic acceptance is a follow-on).
+    """
+
+    def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
+                 policy: TCPolicy = BF16, *, gamma: int = 4,
+                 draft_weights_fmt: str = "posit8_2",
+                 draft_kv_format: str = "posit8"):
+        if gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {gamma}")
+        if any(bt != "attn" for bt in cfg.block_types) or cfg.window \
+                or cfg.family in ("moe", "audio"):
+            raise ValueError(
+                "speculative decoding needs a decoder-only attention "
+                "stack without MoE or sliding windows (rollback is a row "
+                f"rewind); {cfg.name} is not one")
+        super().__init__(cfg, params, scfg, policy)
+        self.gamma = gamma
+        self._T = gamma + 1                     # verify chunk length
+        if scfg.max_len <= self._T:
+            raise ValueError(f"max_len {scfg.max_len} leaves no room for a "
+                             f"gamma+1 = {self._T} verify chunk")
+        self.draft = draft_policy(self.policy, weights_fmt=draft_weights_fmt,
+                                  kv_format=draft_kv_format)
+        b, L = scfg.max_batch, scfg.max_len
+        self.draft_cache = init_cache(cfg, b, L, policy=self.draft)
+        self.draft_cache["pos"] = jnp.zeros((b,), jnp.int32)
+        self.draft_pos = np.zeros(b, np.int64)  # committed draft rows/slot
+        # committed token the draft cache is missing (all-accepted rounds
+        # leave the draft one row behind); None = in sync
+        self._lag_tok: List[Optional[int]] = [None] * b
+
+        self._draft_decode = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, cfg, self.draft))
+        self._draft_prefill = jax.jit(
+            lambda p, batch: prefill(p, batch, cfg, L, self.draft))
+        self._verify = jax.jit(
+            lambda p, c, t: verify_step(p, c, t, cfg, self.policy))
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self._draft_merge = jax.jit(self._merge_prefill,
+                                    donate_argnums=donate)
+        self._rb_ring = jax.jit(rollback_ring_cache, donate_argnums=donate)
+        self._rb_paged = jax.jit(rollback_paged_cache, donate_argnums=donate)
+        self.stats.update(spec_rounds=0, draft_steps=0, drafts_proposed=0,
+                          drafts_accepted=0)
+        # the draft ring is real HBM: re-report the footprint including it
+        self.stats["kv_cache_bytes"] = self.kv_cache_bytes()
+
+    # ---- cache footprint (target cache + the dense draft ring) ----
+    def _draft_kv_bytes(self) -> int:
+        """The draft ring's reserved bytes (a dense per-slot max_len ring
+        at draft precision — always fully reserved, never paged).  0 while
+        the base __init__ runs, before the draft cache exists."""
+        draft_cache = getattr(self, "draft_cache", None)
+        if draft_cache is None:
+            return 0
+        return self._kv_bytes(cache=draft_cache)
+
+    def kv_cache_bytes(self) -> int:
+        return super().kv_cache_bytes() + self._draft_kv_bytes()
+
+    def kv_cache_live_bytes(self) -> int:
+        return super().kv_cache_live_bytes() + self._draft_kv_bytes()
+
+    def kv_cache_peak_live_bytes(self) -> int:
+        return super().kv_cache_peak_live_bytes() + self._draft_kv_bytes()
+
+    # ---- admission ----
+    def _reject_reason(self, req: Request) -> Optional[str]:
+        r = super()._reject_reason(req)
+        if r is not None:
+            return r
+        if len(req.prompt) > self.scfg.max_len - self._T:
+            return (f"prompt length {len(req.prompt)} > max_len - (gamma+1)"
+                    f" = {self.scfg.max_len - self._T}: no room for a "
+                    "verify chunk")
+        if self._req_temp(req) > 0:
+            return ("speculative decoding is greedy-only; set "
+                    "Request.temperature=0 (or serve through the baseline "
+                    "engine)")
+        return None
+
+    def _worst_pages(self, req: Request) -> int:
+        """Worst-case page demand including the verify chunk's transient
+        rows: a round may write gamma+1 rows past the committed length
+        before rolling back, so the reservation covers committed + T."""
+        s = len(req.prompt)
+        tokens = min(max(s + req.max_new, s + 1) + self._T,
+                     self.scfg.max_len)
+        return pages_for(tokens, self.allocator.page_size)
+
+    def add_request(self, req: Request) -> bool:
+        reject = self._reject_reason(req)
+        if reject is not None:
+            raise ValueError(f"{reject}; reject before admission")
+        if not super().add_request(req):
+            return False
+        slot = next((i for i, r in enumerate(self.slot_req) if r is req),
+                    None)
+        if slot is None:        # finished at admission (max_new<=1 / EOS)
+            return True
+        # draft-cache lifecycle: mirror the prompt into the draft ring so
+        # round 1 drafts from the same committed prefix as the target
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        _, dc1 = self._draft_prefill(self.params, {"tokens": prompt})
+        self.draft_cache = self._draft_merge(
+            self.draft_cache, dc1, jnp.asarray(slot, jnp.int32), None)
+        self.draft_pos[slot] = len(req.prompt)
+        self._lag_tok[slot] = None
+        return True
+
+    # ---- one speculative round for the whole batch ----
+    def step(self):
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        b, gamma, T = self.scfg.max_batch, self.gamma, self._T
+        pre_pos = self.slot_pos.copy()          # committed rows per slot
+        pre_draft = self.draft_pos.copy()
+
+        # ---- draft phase: gamma lockstep low-precision steps ----
+        cur = np.zeros((b, 1), np.int32)
+        proposals = np.zeros((b, gamma), np.int32)
+        nprop = np.zeros(b, np.int64)
+        catchup = np.zeros(b, bool)
+        for i in active:
+            if self._lag_tok[i] is not None:
+                cur[i, 0] = self._lag_tok[i]
+                catchup[i] = True
+            else:
+                cur[i, 0] = self.last_tok[i, 0]
+        for s in range(gamma):
+            logits_d, self.draft_cache = self._draft_decode(
+                self.params, self.draft_cache, jnp.asarray(cur))
+            toks = np.asarray(logits_d)[:, : self.cfg.vocab].argmax(-1)
+            self.stats["draft_steps"] += 1
+            for i in active:
+                if s == 0 and catchup[i]:
+                    # catch-up: the output re-predicts a token we already
+                    # committed; discard it and feed the real one next
+                    cur[i, 0] = self.last_tok[i, 0]
+                    continue
+                proposals[i, nprop[i]] = toks[i]
+                nprop[i] += 1
+                cur[i, 0] = toks[i]
+        self.stats["drafts_proposed"] += int(nprop[active].sum())
+
+        # ---- verify phase: one target-precision chunk pass ----
+        chunk = np.zeros((b, T), np.int32)
+        for i in active:
+            chunk[i, 0] = self.last_tok[i, 0]
+            chunk[i, 1:1 + nprop[i]] = proposals[i, : nprop[i]]
+        if self.paged:
+            grew = False
+            for i in active:
+                need = self.slot_pages[i].pages_needed(self.slot_pos[i] + T)
+                if need:
+                    pages = self.allocator.alloc(need)
+                    if pages is None:
+                        raise RuntimeError(
+                            "paged KV pool exhausted before a verify chunk "
+                            "— the speculative reservation invariant was "
+                            "violated")
+                    self.slot_pages[i].pages.extend(pages)
+                    self._table[i] = self.slot_pages[i].table_row(self._pmax)
+                    grew = True
+            if grew:
+                self.cache["page_table"] = jnp.asarray(self._table)
+            self.stats["peak_live_pages"] = max(
+                self.stats["peak_live_pages"], self.allocator.live_pages)
+        # page lists as of the verify write extent (rollback scrubs
+        # against these, BEFORE truncation/free)
+        old_pages = ([list(self.slot_pages[i].pages) for i in range(b)]
+                     if self.paged else None)
+        logits_v, self.cache = self._verify(self.params, self.cache,
+                                            jnp.asarray(chunk))
+        g = np.asarray(logits_v)[..., : self.cfg.vocab].argmax(-1)  # (B, T)
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+
+        # ---- per-slot acceptance + commit ----
+        for i in active:
+            req = self.slot_req[i]
+            n = int(nprop[i])
+            k = 0
+            while k < n and proposals[i, k] == g[i, k]:
+                k += 1
+            # emission budget: keep the stream identical to baseline
+            # greedy, which stops at exactly max_new tokens
+            k = min(k, req.max_new - len(req.out_tokens) - 1)
+            emitted = [int(t) for t in proposals[i, :k]] + [int(g[i, k])]
+            eos = self.scfg.eos_id
+            if eos is not None and eos in emitted:
+                emitted = emitted[: emitted.index(eos) + 1]
+            # emitted tokens are accepted drafts plus (unless an EOS draft
+            # truncated the list first) one non-draft bonus token
+            self.stats["drafts_accepted"] += min(len(emitted), k)
+            req.out_tokens.extend(emitted)
+            self.stats["tokens"] += len(emitted)
+            self.last_tok[i, 0] = emitted[-1]
+            self.slot_pos[i] = pre_pos[i] + len(emitted)
+            # draft sync: rows the draft holds for the committed prefix
+            drafted_rows = pre_draft[i] + gamma
+            self.draft_pos[i] = min(drafted_rows, self.slot_pos[i])
+            lag = int(self.slot_pos[i] - self.draft_pos[i])
+            self._lag_tok[i] = int(chunk[i, k]) if lag else None
+            if (len(req.out_tokens) >= req.max_new
+                    or (eos is not None and emitted[-1] == eos)
+                    or self.slot_pos[i] > self.scfg.max_len - T):
+                req.done = True
+                self._free_request_slot(i)      # resets slot_pos/draft state
+                self.draft_pos[i] = 0
+                self._lag_tok[i] = None
+
+        # ---- KV rollback: target cache ----
+        new_pos = self.slot_pos.copy()          # post-free (0 for done/idle)
+        if self.paged:
+            ps = self.allocator.page_size
+            scrub = np.zeros(b * T, np.int64)   # padded with trash row 0
+            nscrub = 0
+            truncated = False
+            for i in active:
+                if self.slot_req[i] is None:    # freed above: pages already
+                    continue                    # back in the pool
+                sp = self.slot_pages[i]
+                keep = pages_for(int(new_pos[i]), ps)
+                orphans = sp.pages[keep:]
+                for p in range(int(new_pos[i]), int(pre_pos[i]) + T):
+                    scrub[nscrub] = old_pages[i][p // ps] * ps + p % ps
+                    nscrub += 1
+                if orphans:
+                    self.allocator.free(orphans)
+                    del sp.pages[keep:]
+                    self._table[i] = sp.table_row(self._pmax)
+                    truncated = True
+            if truncated:
+                self.cache["page_table"] = jnp.asarray(self._table)
+            self.cache = self._rb_paged(self.cache, new_pos,
+                                        jnp.asarray(scrub, jnp.int32))
+        else:
+            self.cache = self._rb_ring(self.cache, new_pos, pre_pos + T)
+        # ---- KV rollback: draft ring (always ring layout) ----
+        self.draft_cache = self._rb_ring(self.draft_cache, self.draft_pos,
+                                         pre_draft + gamma)

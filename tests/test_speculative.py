@@ -1,0 +1,390 @@
+"""Self-speculative decoding: draft-policy derivation, chunked append
+kernels vs refs, verify_step bit-identity, KV rollback invariants
+(post-rollback caches bit-identical to never-drafted ones), allocator
+edge-case hardening, per-request temperature, and the acceptance
+criterion — speculative greedy streams token-identical to baseline greedy
+across layouts and KV formats with < 1 target step per emitted token."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.formats import POSIT8_2
+from repro.core.transprecision import BF16, draft_policy
+from repro.kernels import kv_cache as kvk
+from repro.kernels import paged_kv as pkv
+from repro.models import lm
+from repro.models.serve_model import decode_step, init_cache, prefill, \
+    verify_step
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.paged import PageAllocator
+from repro.serve.speculative import SpeculativeEngine
+
+
+# ---------------------------------------------------------------------------
+# Allocator edge cases (satellite: raise clearly, never corrupt state)
+# ---------------------------------------------------------------------------
+
+def test_allocator_free_trash_page_raises():
+    a = PageAllocator(num_pages=4, page_size=2)
+    with pytest.raises(ValueError, match="trash page"):
+        a.free([0])
+    assert a.num_free == 3                       # untouched
+
+
+def test_allocator_free_out_of_range_raises():
+    a = PageAllocator(num_pages=4, page_size=2)
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([4])
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.free([-1])                             # would wrap under numpy
+    assert a.num_free == 3
+
+
+def test_allocator_double_free_is_atomic():
+    """A free list containing a double free must raise BEFORE any
+    refcount moves — the valid pages in the same call stay allocated."""
+    a = PageAllocator(num_pages=5, page_size=2)
+    pages = a.alloc(3)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(pages + [pages[0]])               # duplicate within one call
+    assert a.num_free == 1                       # nothing was freed
+    assert all(a.ref_count(p) == 1 for p in pages)
+    a.free(pages)                                # still fully freeable
+    assert a.num_free == 4
+
+
+def test_allocator_fork_after_free_raises():
+    a = PageAllocator(num_pages=4, page_size=2)
+    p = a.alloc(2)
+    a.free(p)
+    with pytest.raises(ValueError, match="not allocated"):
+        a.fork(p)
+    with pytest.raises(ValueError, match="trash page"):
+        a.fork([0])
+    with pytest.raises(ValueError, match="out-of-range"):
+        a.fork([9])
+    assert a.num_free == 3
+
+
+def test_allocator_fork_atomic_on_partial_failure():
+    a = PageAllocator(num_pages=5, page_size=2)
+    keep = a.alloc(2)
+    dropped = a.alloc(1)
+    a.free(dropped)
+    with pytest.raises(ValueError):
+        a.fork(keep + dropped)                   # last page is freed
+    assert all(a.ref_count(p) == 1 for p in keep)  # no refcount leak
+
+
+# ---------------------------------------------------------------------------
+# Draft-policy derivation
+# ---------------------------------------------------------------------------
+
+def test_draft_policy_derivation():
+    target = dataclasses.replace(BF16, kv_format="f32", kv_layout="paged",
+                                 layer_overrides=((0, "mlp_weights",
+                                                   "posit16_2"),),
+                                 name="tgt")
+    d = draft_policy(target)
+    assert d.attn_weights == "posit8_2" and d.mlp_weights == "posit8_2"
+    assert d.kv_format == "posit8"
+    assert d.kv_layout == "ring"                 # draft cache never pages
+    assert d.layer_overrides == ()               # uniformly cheap
+    assert "draft" in d.name
+    wide = draft_policy(target, weights_fmt="posit16_2",
+                        kv_format="posit16")
+    assert wide.kv_format == "posit16" and wide.mlp_weights == "posit16_2"
+
+
+# ---------------------------------------------------------------------------
+# Chunked append kernels vs jnp oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+def test_kv_append_rows_kernel_bit_exact():
+    rng = np.random.default_rng(5)
+    b, w, nkv, hd, t = 2, 16, 2, 8, 3
+    fmt = POSIT8_2
+    kc = jnp.zeros((b, w, nkv, hd), fmt.storage_dtype)
+    ks = jnp.ones((b, w, nkv), jnp.float32)
+    kn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    pos = jnp.asarray([3, 11], jnp.int32)
+    got = kvk.kv_append_rows(kc, ks, kc, ks, kn, vn, pos, fmt,
+                             interpret=True)
+    want = kvk.kv_append_rows_ref(kc, ks, kc, ks, kn, vn, pos, fmt)
+    for g_, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+def test_kv_append_rows_matches_sequential_single_appends():
+    """T-row chunk append == T single-row appends (same codec, same
+    rows): the property verify_step's bit-identity rests on."""
+    rng = np.random.default_rng(6)
+    b, w, nkv, hd, t = 2, 12, 2, 8, 4
+    fmt = POSIT8_2
+    kc = jnp.zeros((b, w, nkv, hd), fmt.storage_dtype)
+    ks = jnp.ones((b, w, nkv), jnp.float32)
+    kn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    pos = jnp.asarray([0, 5], jnp.int32)
+    chunk = kvk.kv_append_rows_ref(kc, ks, kc, ks, kn, vn, pos, fmt)
+    seq = (kc, ks, kc, ks)
+    for i in range(t):
+        seq = kvk.kv_append_ref(*seq, kn[:, i:i + 1], vn[:, i:i + 1],
+                                pos + i, fmt)
+    for c_, s_ in zip(chunk, seq):
+        np.testing.assert_array_equal(np.asarray(c_), np.asarray(s_))
+
+
+def test_paged_append_rows_kernel_bit_exact():
+    rng = np.random.default_rng(7)
+    b, nkv, hd, ps, npages, t = 2, 2, 8, 4, 6, 3
+    fmt = POSIT8_2
+    kc = jnp.zeros((npages * ps, nkv, hd), fmt.storage_dtype)
+    ks = jnp.ones((npages * ps, nkv), jnp.float32)
+    kn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(0, 1, (b, t, nkv, hd)), jnp.float32)
+    table = jnp.asarray([[1, 2, 0], [3, 4, 5]], jnp.int32)
+    dst = pkv.flat_dst_rows_chunk(table, jnp.asarray([2, 6]), t, ps)
+    # chunk rows match the per-token row computation
+    for ti in range(t):
+        one = pkv.flat_dst_rows(table, jnp.asarray([2 + ti, 6 + ti]), ps)
+        np.testing.assert_array_equal(np.asarray(dst[:, ti]),
+                                      np.asarray(one))
+    got = pkv.paged_kv_append_rows(kc, ks, kc, ks, kn, vn, dst, fmt,
+                                   interpret=True)
+    want = pkv.paged_kv_append_rows_ref(kc, ks, kc, ks, kn, vn, dst, fmt)
+    for g_, w_ in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_))
+
+
+# ---------------------------------------------------------------------------
+# verify_step bit-identity + engine stream equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (4, 11, 7)]
+    return cfg, params, prompts
+
+
+@pytest.mark.parametrize("layout", ["ring", "paged"])
+def test_verify_step_bit_identical_to_sequential(smoke_model, layout):
+    """One (B, T) verify pass == T sequential decode_steps: same logits,
+    same cache rows (posit8 target)."""
+    cfg, params, prompts = smoke_model
+    pol = dataclasses.replace(BF16, kv_format="posit8", kv_layout=layout,
+                              kv_page_size=4, name=f"vt_{layout}")
+    toks = jnp.asarray(prompts[2], jnp.int32)[None, :]
+    l0, cache = prefill(params, {"tokens": toks}, cfg, 32, pol)
+    chunk = [int(np.argmax(np.asarray(l0)[0][: cfg.vocab]))]
+    seq_logits, c = [], cache
+    for _ in range(4):
+        lg, c = decode_step(params, c, jnp.asarray([[chunk[-1]]], jnp.int32),
+                            cfg, pol)
+        seq_logits.append(np.asarray(lg)[0])
+        chunk.append(int(np.argmax(np.asarray(lg)[0][: cfg.vocab])))
+    _, cache2 = prefill(params, {"tokens": toks}, cfg, 32, pol)
+    lv, c2 = verify_step(params, cache2, jnp.asarray([chunk[:4]], jnp.int32),
+                         cfg, pol)
+    np.testing.assert_array_equal(np.asarray(lv)[0], np.stack(seq_logits))
+    for leaf_seq, leaf_chunk in zip(jax.tree_util.tree_leaves(dict(c)),
+                                    jax.tree_util.tree_leaves(dict(c2))):
+        np.testing.assert_array_equal(np.asarray(leaf_seq),
+                                      np.asarray(leaf_chunk))
+
+
+def _never_drafted_cache(cfg, params, prompt, tokens, pol, max_len):
+    """Target cache after committing ``tokens[:-1]`` the plain way."""
+    toks = jnp.asarray(prompt, jnp.int32)[None, :]
+    _, cache = prefill(params, {"tokens": toks}, cfg, max_len, pol)
+    cache["pos"] = jnp.broadcast_to(cache["pos"], (1,)).astype(jnp.int32)
+    for t in tokens[:-1]:
+        _, cache = decode_step(params, cache,
+                               jnp.asarray([[t]], jnp.int32), cfg, pol)
+    return cache
+
+
+@pytest.mark.parametrize("kvf", ["f32", "posit8"])
+def test_ring_rollback_bit_identical_to_never_drafted(smoke_model, kvf):
+    """Acceptance-critical invariant: after any number of speculative
+    rounds the ring cache equals, bit for bit, a cache that decoded the
+    committed tokens one at a time and never drafted."""
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=1, max_len=32, kv_format=kvf,
+                       kv_layout="ring")
+    eng = SpeculativeEngine(cfg, params, scfg, gamma=3)
+    req = Request(uid=0, prompt=prompts[0], max_new=6)
+    eng.add_request(req)
+    while not req.done and len(req.out_tokens) < 4:
+        eng.step()
+    pol = eng.policy
+    ref = _never_drafted_cache(cfg, params, prompts[0], req.out_tokens,
+                               pol, 32)
+    for got, want in zip(jax.tree_util.tree_leaves(dict(eng.cache)),
+                         jax.tree_util.tree_leaves(dict(ref))):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_rollback_bit_identical_and_frees_orphans(smoke_model):
+    """Paged rollback truncates the page list, returns orphaned pages to
+    the allocator, and scrubs rolled-back pool rows so the slot's
+    allocated pages are bit-identical to a never-drafted run's."""
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=1, max_len=32, kv_format="posit8",
+                       kv_layout="paged", page_size=4)
+    eng = SpeculativeEngine(cfg, params, scfg, gamma=3)
+    req = Request(uid=0, prompt=prompts[0], max_new=6)
+    eng.add_request(req)
+    while not req.done and len(req.out_tokens) < 4:
+        eng.step()
+    n = int(eng.slot_pos[0])
+    # page accounting: exactly the committed length's pages stay live
+    assert len(eng.slot_pages[0].pages) == -(-n // 4)
+    assert eng.allocator.live_pages == len(eng.slot_pages[0].pages)
+    ref = _never_drafted_cache(cfg, params, prompts[0], req.out_tokens,
+                               eng.policy, 32)
+    # compare the slot-logical view (gathered pages) — physical page ids
+    # differ between the engine pool and the identity-table reference
+    ps = 4
+    for blk_e, blk_r in zip(eng.cache["blocks"], ref["blocks"]):
+        for name in ("k", "v", "k_scale", "v_scale"):
+            for L in range(blk_e[name].shape[0]):
+                got = pkv.gather_pages(blk_e[name][L],
+                                       eng.cache["page_table"], ps)
+                want = pkv.gather_pages(blk_r[name][L],
+                                        ref["page_table"], ps)
+                np.testing.assert_array_equal(
+                    np.asarray(got)[0, :n], np.asarray(want)[0, :n],
+                    err_msg=f"{name} layer {L}")
+                # rolled-back rows within still-allocated pages are
+                # scrubbed to init values
+                tail = np.asarray(got)[0, n: len(eng.slot_pages[0].pages) * ps]
+                init = 1.0 if name.endswith("_scale") else 0
+                assert (tail == init).all(), f"{name} layer {L} not scrubbed"
+
+
+@pytest.mark.parametrize("layout", ["ring", "paged"])
+@pytest.mark.parametrize("kvf", ["f32", "posit16", "posit8"])
+def test_speculative_stream_identical_to_baseline(smoke_model, kvf, layout):
+    """THE acceptance criterion: speculative greedy decode emits
+    token-for-token the same streams as baseline greedy decode, for both
+    layouts and every posit/f32 target format, under continuous batching
+    with slot reuse — while doing strictly fewer target decode steps than
+    tokens (the speedup exists)."""
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=2, max_len=48, kv_format=kvf,
+                       kv_layout=layout, page_size=4)
+    base = ServingEngine(cfg, params, scfg)
+    reqs_b = [Request(uid=i, prompt=p, max_new=5)
+              for i, p in enumerate(prompts)]
+    base.serve(reqs_b)
+    spec = SpeculativeEngine(cfg, params, scfg, gamma=3)
+    reqs_s = [Request(uid=i, prompt=p, max_new=5)
+              for i, p in enumerate(prompts)]
+    stats = spec.serve(reqs_s)
+    assert [r.out_tokens for r in reqs_s] == [r.out_tokens for r in reqs_b]
+    decode_tokens = stats["tokens"] - stats["prefills"]
+    assert stats["decode_steps"] < decode_tokens      # > 1 token per verify
+    assert 0 < stats["drafts_accepted"] <= stats["drafts_proposed"]
+    if layout == "paged":
+        assert spec.allocator.live_pages == 0         # no page leaks
+
+
+def test_speculative_eos_stream_identical(smoke_model):
+    """EOS inside an accepted draft run truncates exactly like baseline."""
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=2, max_len=48, kv_format="f32",
+                       kv_layout="ring", eos_id=29)
+    base = ServingEngine(cfg, params, scfg)
+    reqs_b = [Request(uid=i, prompt=p, max_new=8)
+              for i, p in enumerate(prompts)]
+    base.serve(reqs_b)
+    spec = SpeculativeEngine(cfg, params, scfg, gamma=3)
+    reqs_s = [Request(uid=i, prompt=p, max_new=8)
+              for i, p in enumerate(prompts)]
+    spec.serve(reqs_s)
+    assert [r.out_tokens for r in reqs_s] == [r.out_tokens for r in reqs_b]
+
+
+def test_speculative_rejects_non_greedy(smoke_model):
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=1, max_len=32)
+    eng = SpeculativeEngine(cfg, params, scfg, gamma=2)
+    hot = Request(uid=0, prompt=prompts[0], max_new=4, temperature=0.7)
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.add_request(hot)
+    stats = eng.serve([hot])                 # queue path: rejected cleanly
+    assert hot.done and hot.error is not None and stats["rejected"] == 1
+    # an explicit temperature=0 opts back in under a hot engine default
+    scfg_hot = ServeConfig(max_batch=1, max_len=32, temperature=0.9)
+    eng2 = SpeculativeEngine(cfg, params, scfg_hot, gamma=2)
+    cold = Request(uid=1, prompt=prompts[0], max_new=3, temperature=0.0)
+    eng2.serve([cold])
+    assert cold.done and len(cold.out_tokens) == 3 and cold.error is None
+
+
+def test_speculative_rejects_unsupported_archs(smoke_model):
+    cfg, params, _ = smoke_model
+    hybrid = get_config("recurrentgemma-9b", smoke=True)
+    with pytest.raises(ValueError, match="decoder-only attention"):
+        SpeculativeEngine(hybrid, None, ServeConfig(max_batch=1, max_len=32))
+    with pytest.raises(ValueError, match="gamma"):
+        SpeculativeEngine(cfg, params, ServeConfig(max_batch=1, max_len=32),
+                          gamma=0)
+
+
+# ---------------------------------------------------------------------------
+# Per-request temperature (satellite)
+# ---------------------------------------------------------------------------
+
+def test_per_request_temperature_greedy_override(smoke_model):
+    """A temperature=0 request inside a hot-default engine must reproduce
+    the all-greedy engine's stream for the same prompt (the docstring's
+    per-request sampling promise, previously ignored by _sample)."""
+    cfg, params, prompts = smoke_model
+    greedy_eng = ServingEngine(cfg, params,
+                               ServeConfig(max_batch=1, max_len=32))
+    ref = Request(uid=0, prompt=prompts[1], max_new=5)
+    greedy_eng.serve([ref])
+    hot_eng = ServingEngine(cfg, params,
+                            ServeConfig(max_batch=2, max_len=32,
+                                        temperature=1.5, seed=3))
+    cold = Request(uid=1, prompt=prompts[1], max_new=5, temperature=0.0)
+    hot = Request(uid=2, prompt=prompts[1], max_new=5)
+    hot_eng.serve([cold, hot])
+    assert cold.out_tokens == ref.out_tokens
+    # the hot request really samples (astronomically unlikely to match
+    # greedy on 5 draws over a 256 vocab if temperature were ignored)
+    assert hot.out_tokens != ref.out_tokens
+
+
+def test_speculative_kv_bytes_include_draft_ring(smoke_model):
+    """The draft ring is real HBM: every footprint stat must include it
+    on top of the baseline engine's target-cache bytes."""
+    cfg, params, _ = smoke_model
+    scfg = ServeConfig(max_batch=2, max_len=32, kv_format="posit8",
+                       kv_layout="paged", page_size=4)
+    base = ServingEngine(cfg, params, scfg)
+    spec = SpeculativeEngine(cfg, params, scfg, gamma=2)
+    draft = spec._draft_kv_bytes()
+    assert draft > 0
+    assert spec.kv_cache_bytes() == base.kv_cache_bytes() + draft
+    assert spec.kv_cache_live_bytes() >= draft
+    assert spec.stats["kv_cache_bytes"] == spec.kv_cache_bytes()
+
+
+def test_per_request_temperature_sampled_path_valid(smoke_model):
+    cfg, params, prompts = smoke_model
+    eng = ServingEngine(cfg, params, ServeConfig(max_batch=2, max_len=32))
+    warm = Request(uid=0, prompt=prompts[0], max_new=6, temperature=0.8)
+    eng.serve([warm])
+    assert warm.done and len(warm.out_tokens) == 6
+    assert all(0 <= t < cfg.vocab for t in warm.out_tokens)
