@@ -1,0 +1,130 @@
+"""Serving latency percentiles under offered load (TTFT / ITL sweep).
+
+Drives the async :class:`~repro.serve.orchestrator.Orchestrator` (the
+three-stage prefill→insert→generate engine underneath) with Poisson
+request arrivals at several offered loads, expressed as multiples of the
+engine's measured single-stream service rate.  Per load point it reports
+host-side latency percentiles — the numbers a serving deployment is
+actually graded on:
+
+  * TTFT  — submit-to-first-token, p50/p99 (prefill + queueing);
+  * ITL   — inter-token latency within a stream, p50/p99 (decode round
+    cadence; batched speculative commits would share one stamp);
+  * achieved vs offered throughput (requests/s and tokens/s).
+
+At offered load <= the service rate the queue stays short and p99 TTFT
+tracks prefill latency; past saturation (the 2x point) queueing delay
+dominates and p99 TTFT grows with the backlog — the sweep makes that
+knee visible.  CPU-reference numbers on this container; the shape of the
+curve, not the absolute latencies, is the artifact.
+
+Writes ``benchmarks/results/BENCH_serving.json`` (plus run.py's generic
+``serving.json``).
+
+  PYTHONPATH=src python -m benchmarks.run serving
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
+                                      StreamingRequest)
+
+LOAD_FACTORS = (0.5, 1.0, 2.0)      # x the measured service rate
+MAX_BATCH, MAX_LEN, MAX_NEW, N_REQ = 2, 64, 8, 8
+KV_FORMAT = "posit8"
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, int(rng.integers(4, 13))).tolist()
+            for _ in range(N_REQ)]
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
+
+
+def _run_load(eng, prompts, rate_rps, rng):
+    """Submit N_REQ prompts with Poisson gaps at rate_rps; return metrics."""
+    ev0 = eng.stats.get("evictions", 0)
+    orch = Orchestrator(eng, OrchestratorConfig(max_queue=4 * N_REQ,
+                                                detokenize=False))
+    sreqs = [StreamingRequest(p, max_new=MAX_NEW) for p in prompts]
+    gaps = rng.exponential(1.0 / rate_rps, size=len(sreqs))
+    t0 = time.time()
+    for sreq, gap in zip(sreqs, gaps):
+        assert orch.submit(sreq, timeout=120.0)
+        time.sleep(float(gap))
+    for sreq in sreqs:
+        assert sreq.wait(300.0), "stream did not finish"
+    orch.close()
+    wall = time.time() - t0
+    ttft = [s.ttft_s for s in sreqs]
+    itl = [g for s in sreqs for g in s.itl_s()]
+    tokens = sum(len(s.out_tokens) for s in sreqs)
+    return {"offered_rps": rate_rps,
+            "achieved_rps": len(sreqs) / wall,
+            "tok_per_s": tokens / wall,
+            "ttft_ms": {"p50": _pct(ttft, 50) * 1e3,
+                        "p99": _pct(ttft, 99) * 1e3},
+            "itl_ms": {"p50": _pct(itl, 50) * 1e3,
+                       "p99": _pct(itl, 99) * 1e3},
+            "evictions": eng.stats.get("evictions", 0) - ev0}
+
+
+def run():
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
+                       kv_format=KV_FORMAT)
+    eng = ServingEngine(cfg, params, scfg)
+    prompts = _prompts(cfg)
+
+    # calibrate: back-to-back batch (compiles all prefill buckets + the
+    # decode step, so the sweep below measures steady-state latency)
+    rng = np.random.default_rng(1)
+    warm = _run_load(eng, prompts, rate_rps=1e3, rng=rng)
+    service_rps = warm["achieved_rps"]
+
+    out = {"shape": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
+                     "max_new": MAX_NEW, "requests": N_REQ,
+                     "kv_format": KV_FORMAT},
+           "service_rps": service_rps, "loads": []}
+    for f in LOAD_FACTORS:
+        m = _run_load(eng, prompts, rate_rps=f * service_rps, rng=rng)
+        m["load_factor"] = f
+        out["loads"].append(m)
+    return out
+
+
+def main(verbose=False):
+    out = run()
+    if verbose:
+        print(f"[serving] service rate {out['service_rps']:.2f} req/s "
+              f"({out['shape']['requests']} reqs, "
+              f"max_new={out['shape']['max_new']})")
+        for m in out["loads"]:
+            print(f"  load {m['load_factor']:.1f}x: offered "
+                  f"{m['offered_rps']:.2f} rps, achieved "
+                  f"{m['achieved_rps']:.2f} rps | TTFT p50/p99 "
+                  f"{m['ttft_ms']['p50']:.0f}/{m['ttft_ms']['p99']:.0f} ms"
+                  f" | ITL p50/p99 {m['itl_ms']['p50']:.0f}/"
+                  f"{m['itl_ms']['p99']:.0f} ms")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "BENCH_serving.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    main(verbose=True)

@@ -37,13 +37,15 @@ def _entry(name):
         from . import bench_paged_kv as m
     elif name == "speculative":
         from . import bench_speculative as m
+    elif name == "serving":
+        from . import bench_serving as m
     else:
         raise KeyError(name)
     return m
 
 
 ALL = ("table3", "table4", "table5", "table6", "accuracy", "kernels",
-       "kv_cache", "paged_kv", "speculative", "roofline")
+       "kv_cache", "paged_kv", "speculative", "serving", "roofline")
 
 
 def main():
@@ -79,6 +81,10 @@ def main():
         elif name == "speculative":
             derived = (f"ident={out['all_identical']};"
                        f"tgt_steps={out['best_target_steps_per_token']:.2f}")
+        elif name == "serving":
+            knee = out["loads"][-1]
+            derived = (f"loads={len(out['loads'])};"
+                       f"p99_ttft_ms={knee['ttft_ms']['p99']:.0f}")
         csv.append(f"{name},{dt_us:.0f},{derived}")
         print()
     print("\n".join(csv))

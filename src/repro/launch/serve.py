@@ -1,9 +1,21 @@
-"""Serving launcher: batched requests through the ServingEngine.
+"""Serving launcher: batched requests through the three-stage engine.
 
 ``python -m repro.launch.serve --arch paper-edge --policy paper_edge_p8``
 demonstrates the paper's deployment mode: an edge LM whose weights live in
 posit P(8,2), decoded on load, serving a batch of concurrent requests with
-continuous batching.
+continuous batching.  Underneath, serving is the disaggregated
+``prefill -> insert -> generate`` API (``repro.serve.engine_api``):
+prompts prefill in bucketed-length batches, insert into free decode
+slots (scattered straight into pool pages on the paged layout), and one
+jitted ``generate`` program ticks the whole batch.
+
+``--async`` swaps the synchronous ``engine.serve`` loop for the threaded
+orchestrator (``repro.serve.orchestrator``): a backpressured submission
+queue with admission timeouts, Poisson arrivals at ``--rate`` req/s, and
+host-side detokenize/streaming overlapped with device compute; it reports
+TTFT and inter-token latency percentiles.  ``--overcommit`` (paged
+layout) admits on current page demand instead of the worst case and
+evicts/requeues the newest sequence if the pool runs dry.
 """
 from __future__ import annotations
 
@@ -39,6 +51,22 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged layout: pool size incl. trash page "
                          "(None: full reservation)")
+    ap.add_argument("--overcommit", action="store_true",
+                    help="paged layout: admit on current page demand and "
+                         "evict-and-requeue the newest sequence when the "
+                         "pool runs dry (stats['evictions'])")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="drive the threaded orchestrator (backpressured "
+                         "queue, Poisson arrivals, per-token streaming) "
+                         "instead of the synchronous serve loop; prints "
+                         "TTFT/ITL percentiles")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="async: offered load in requests/s "
+                         "(0 = submit back-to-back)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="async: backpressure cap on requests in flight")
+    ap.add_argument("--admission-timeout", type=float, default=60.0,
+                    help="async: seconds submit may block on a full queue")
     ap.add_argument("--speculative", action="store_true",
                     help="self-speculative greedy decode: gamma posit8 "
                          "draft steps + one target-precision verify per "
@@ -58,7 +86,8 @@ def main():
     scfg = ServeConfig(max_batch=args.batch, max_len=args.max_len,
                        temperature=args.temperature,
                        kv_format=args.kv_format, kv_layout=args.kv_layout,
-                       page_size=args.page_size, num_pages=args.num_pages)
+                       page_size=args.page_size, num_pages=args.num_pages,
+                       page_overcommit=args.overcommit)
     if args.speculative:
         from ..serve.speculative import SpeculativeEngine
         engine = SpeculativeEngine(cfg, params, scfg, policy=args.policy,
@@ -67,6 +96,8 @@ def main():
     else:
         engine = ServingEngine(cfg, params, scfg, policy=args.policy)
     rng = np.random.default_rng(0)
+    if args.async_:
+        return _serve_async(engine, cfg, rng, args)
     reqs = [Request(uid=i,
                     prompt=rng.integers(0, cfg.vocab, rng.integers(4, 17)),
                     max_new=args.max_new)
@@ -83,6 +114,41 @@ def main():
               f"target steps/token={spt:.2f}")
     print("stats:", {k: (round(v, 2) if isinstance(v, float) else v)
                      for k, v in stats.items()})
+
+
+def _serve_async(engine, cfg, rng, args):
+    import time
+
+    from ..serve.orchestrator import (Orchestrator, OrchestratorConfig,
+                                      StreamingRequest)
+    ocfg = OrchestratorConfig(max_queue=args.max_queue,
+                              admission_timeout_s=args.admission_timeout,
+                              detokenize=False)
+    sreqs = [StreamingRequest(
+        rng.integers(0, cfg.vocab, rng.integers(4, 17)).tolist(),
+        max_new=args.max_new) for _ in range(args.requests)]
+    with Orchestrator(engine, ocfg) as orch:
+        for s in sreqs:
+            if not orch.submit(s):
+                print("request timed out in admission; dropping")
+                continue
+            if args.rate > 0:
+                time.sleep(float(rng.exponential(1.0 / args.rate)))
+        for s in sreqs:
+            s.wait()
+    for s in sreqs[:4]:
+        print(f"stream: {len(s.out_tokens)} tokens ->",
+              s.out_tokens[:10], "...")
+    ttft = sorted(s.ttft_s for s in sreqs if s.ttft_s is not None)
+    itl = sorted(g for s in sreqs for g in s.itl_s())
+    pct = lambda xs, q: xs[min(int(q / 100 * len(xs)), len(xs) - 1)] * 1e3
+    if ttft:
+        print(f"TTFT p50/p99: {pct(ttft, 50):.1f}/{pct(ttft, 99):.1f} ms")
+    if itl:
+        print(f"ITL  p50/p99: {pct(itl, 50):.1f}/{pct(itl, 99):.1f} ms")
+    print("orchestrator:", orch.stats, "| engine:",
+          {k: (round(v, 2) if isinstance(v, float) else v)
+           for k, v in engine.stats.items()})
 
 
 if __name__ == "__main__":

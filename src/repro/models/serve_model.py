@@ -549,11 +549,22 @@ def verify_step(params, cache, tokens, cfg: ModelCfg,
 # ---------------------------------------------------------------------------
 
 def prefill(params, batch, cfg: ModelCfg, max_len: int,
-            policy: TCPolicy = BF16):
+            policy: TCPolicy = BF16, true_len=None):
     """Run the prompt through the model, returning (last_logits, cache).
 
     Functionally: forward() for the logits + a second pass's worth of cache
     construction fused into the same stack traversal.
+
+    ``true_len`` (scalar or (B,) int32) enables right-padded *bucketed*
+    prefill: ``batch["tokens"]`` is padded to a shared bucket width S and
+    only the first ``true_len[b]`` tokens of each row are real.  Padding
+    rows are causally masked out of every real row's attention (exact-zero
+    contributions, so real logits are bit-identical to an unpadded
+    prefill), their K/V rows are written as cache-init values (paged: to
+    the trash row), logits come from position ``true_len - 1`` per row,
+    and ``cache["pos"]`` is the per-slot ``true_len`` vector.  Only
+    attention-only stacks support this (recurrent/SSM carries and MoE
+    capacity routing are position-dependent under padding).
     """
     from .lm import _attn_block, _rec_block, _ssm_block  # local reuse
     if cfg.family == "vlm" and "embeds" in batch:
@@ -564,6 +575,18 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
         b, s = tokens.shape
         emb = policy.quantize_weight(params["embed"], "embed_weights")
         x = emb[tokens].astype(cfg.dtype)
+    valid = None
+    if true_len is not None:
+        if (any(bt != "attn" for bt in cfg.block_types) or cfg.window
+                or cfg.family in ("moe", "audio")
+                or ("embeds" in batch and cfg.family == "vlm")):
+            raise ValueError(
+                "bucketed prefill (true_len) needs a decoder-only "
+                "attention stack without MoE, sliding windows or "
+                f"cross/vision inputs; {cfg.name} is not one")
+        true_len = jnp.broadcast_to(
+            jnp.asarray(true_len, jnp.int32).reshape(-1), (b,))
+        valid = jnp.arange(s, dtype=jnp.int32)[None, :] < true_len[:, None]
     cache = init_cache(cfg, b, max_len, policy=policy)
     spec = _kv_spec(policy)
     posit_kv = spec is not None and spec.is_posit
@@ -582,14 +605,22 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
     length = min(s, w)
     ring_idx = (start + jnp.arange(length)) % w
     if paged:
-        # per-slot flat pool rows for prompt positions 0..s-1
+        # per-slot flat pool rows for prompt positions 0..s-1; padding
+        # rows (bucketed prefill) land on the trash row 0 instead
         ps = policy.kv_page_size
         tok_idx = jnp.arange(s)
-        flat_rows = (cache["page_table"][:, tok_idx // ps] * ps
-                     + (tok_idx % ps)[None, :]).reshape(-1)      # (b*s,)
+        rows2d = (cache["page_table"][:, tok_idx // ps] * ps
+                  + (tok_idx % ps)[None, :])                     # (b, s)
+        if valid is not None:
+            rows2d = jnp.where(valid, rows2d, 0)
+        flat_rows = rows2d.reshape(-1)                           # (b*s,)
 
     def fill(buf, kv):
-        return buf.at[:, ring_idx].set(kv[:, start:start + length].astype(buf.dtype))
+        rows = kv[:, start:start + length]
+        if valid is not None:   # padding rows hold cache-init zeros
+            rows = jnp.where(valid[:, start:start + length, None, None],
+                             rows, 0)
+        return buf.at[:, ring_idx].set(rows.astype(buf.dtype))
 
     def fill_paged(nc, c_i, name, kv):
         """Bulk write of the prompt's K/V rows into the page pool."""
@@ -610,6 +641,10 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
         codes, scale = kv_kernels.encode_kv_rows(
             kv[:, start:start + length].astype(jnp.float32),
             spec.fmt, spec.packed)
+        if valid is not None:   # padding rows hold cache-init codes/scales
+            vm = valid[:, start:start + length, None, None]
+            codes = jnp.where(vm, codes, 0)
+            scale = jnp.where(vm, scale, 1.0)
         nc[name] = c_i[name].at[:, ring_idx].set(
             codes.astype(c_i[name].dtype))
         nc[name + "_scale"] = c_i[name + "_scale"].at[:, ring_idx].set(
@@ -708,7 +743,12 @@ def prefill(params, batch, cfg: ModelCfg, max_len: int,
         cache["tail"] = tuple(new_tail)
     x = rms_norm(x, params["final_norm"])
     head = params["embed"].T if cfg.tie_embed else params["lm_head"]
-    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cfg.dtype))
-    cache["pos"] = (jnp.full((b,), s, jnp.int32) if paged
-                    else jnp.asarray(s, jnp.int32))
+    x_last = (x[:, -1] if true_len is None
+              else x[jnp.arange(b), true_len - 1])
+    logits = jnp.einsum("bd,dv->bv", x_last, head.astype(cfg.dtype))
+    if true_len is not None:
+        cache["pos"] = true_len
+    else:
+        cache["pos"] = (jnp.full((b,), s, jnp.int32) if paged
+                        else jnp.asarray(s, jnp.int32))
     return logits, cache

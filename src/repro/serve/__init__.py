@@ -1,4 +1,9 @@
 from .engine import Request, ServeConfig, ServingEngine
-from .distributed import distributed_decode_attention, make_distributed_decode_step
+from .engine_api import (Prefix, TransprecisionEngine, rollback_paged_cache,
+                         rollback_ring_cache)
+from .distributed import (distributed_decode_attention,
+                          make_distributed_decode_step,
+                          make_distributed_engine)
+from .orchestrator import Orchestrator, OrchestratorConfig, StreamingRequest
 from .paged import PageAllocator, SlotPages, pages_for
 from .speculative import SpeculativeEngine

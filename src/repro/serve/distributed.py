@@ -227,3 +227,20 @@ def make_distributed_decode_step(cfg, policy, mesh: Mesh, rules,
                                        attn_impl=attn_impl)
 
     return step
+
+
+def make_distributed_engine(cfg, policy, mesh: Mesh, max_batch: int,
+                            max_len: int, axis: str = "model", *,
+                            num_pages=None):
+    """A three-stage :class:`~repro.serve.engine_api.TransprecisionEngine`
+    whose ``generate`` runs the LSE-combined KV-sharded attention — the
+    disaggregated API and the distributed decode path are the same code,
+    differing only in the plugged ``attn_impl``."""
+    from ..core.transprecision import kv_storage
+    from .engine_api import TransprecisionEngine
+    attn_impl = distributed_decode_attention(
+        mesh, axis, kv_spec=kv_storage(policy),
+        paged=getattr(policy, "kv_layout", "ring") == "paged",
+        page_size=getattr(policy, "kv_page_size", 16))
+    return TransprecisionEngine(cfg, policy, max_batch, max_len,
+                                num_pages=num_pages, attn_impl=attn_impl)

@@ -1,40 +1,53 @@
 """Batched serving engine: continuous batching over a TALU-style
 transprecision model (posit-packed weights decoded on load).
 
+This is the synchronous host-side *driver* over the disaggregated
+three-stage engine API (``serve/engine_api.py``):
+
+    prefill(params, tokens, lengths) -> Prefix
+    insert(prefix, decode_state, slot) -> decode_state
+    generate(params, decode_state)    -> (decode_state, logits)
+
 Slot-based continuous batching: a fixed batch of B slots; finished
 sequences free their slot and the next queued request is prefilled into it
 while other slots keep decoding — the standard production pattern
 (vLLM-style) reduced to its JAX-native core:
 
-* ``decode_step`` is ONE jitted program for the whole batch, with TRUE
+* ``generate`` is ONE jitted program for the whole batch, with TRUE
   per-slot positions (``cache["pos"]`` is a (B,) vector): heterogeneous
   prompt lengths batch correctly — each slot ropes, writes and masks at
   its own position, so greedy outputs match single-sequence decode
   exactly;
-* prefill for a joining request runs as a separate jitted call whose
-  K/V rows are merged into the live batch cache with donated
-  ``dynamic_update_slice`` / page-pool scatters on only the leaves that
-  carry per-slot state (no full-cache copy per admission);
+* prompts prefill in power-of-two *buckets* (right-padded, per-row true
+  lengths — padding contributes exact zeros, so outputs are bit-identical
+  to unpadded prefill) and ``add_requests`` admits several queued prompts
+  through one prefill call; ``insert`` merges only the per-slot leaves
+  (donated — no full-cache copy per admission);
 * two KV layouts (``kv_layout``): ``ring`` reserves a dense max_len ring
   per slot; ``paged`` runs a shared posit page pool + per-sequence page
   tables (``serve/paged.py`` allocator, ``kernels/paged_kv.py`` device
-  path) so HBM tracks live tokens and freed sequences return their pages
-  immediately.  Admission control reserves each request's worst-case
-  page demand (prompt + max_new) in accounting while allocating pages on
-  demand, so mid-decode growth never exhausts the pool;
+  path), with prefill K/V rows scattered straight into pool pages.
+  Admission control reserves each request's worst-case page demand
+  (prompt + max_new), so mid-decode growth never exhausts the pool;
+  with ``page_overcommit`` the reservation is waived and a dry pool
+  instead *evicts* the newest sequence (recompute-on-readmit,
+  ``stats["evictions"]``) — higher occupancy at the cost of recompute;
 * admission scans the whole queue for the first admissible request, so
   one oversized/unplaceable head never starves slots later entries could
   fill (no head-of-line blocking);
-* sampling: greedy or temperature (per-request).
+* sampling: greedy or temperature (per-request); ``on_emit`` streams
+  tokens to a host-side consumer (the async ``serve/orchestrator.py``)
+  as they are produced.
 
 For single-host examples this runs real tokens end-to-end; the multi-pod
-decode path (KV-sharded + LSE combine) is exercised by the dry-run.
+decode path (KV-sharded + LSE combine) plugs in through the engine API's
+``attn_impl`` hook (``serve/distributed.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +55,7 @@ import numpy as np
 
 from ..core.transprecision import BF16, TCPolicy, get_policy
 from ..models import lm
-from ..models.serve_model import decode_step, init_cache, prefill
+from .engine_api import TransprecisionEngine
 from .paged import PageAllocator, SlotPages, pages_for
 
 _KV_LEAF_NAMES = ("k", "v", "k_scale", "v_scale", "xk", "xv")
@@ -70,6 +83,11 @@ class ServeConfig:
     # exhaust the pool — requests queue until reservations free up.
     page_size: Optional[int] = None
     num_pages: Optional[int] = None
+    # waive the worst-case reservation and admit on current demand only;
+    # if the pool then runs dry mid-decode the newest-admitted sequence
+    # is evicted and requeued for recompute-on-readmit
+    # (stats["evictions"]) instead of raising.
+    page_overcommit: bool = False
 
 
 @dataclasses.dataclass
@@ -84,23 +102,15 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the request is rejected
-
-
-def _slot_update(dst, src, slot):
-    """Write the single-row ``src`` into ``dst`` at batch index ``slot``.
-    The batch axis is the first axis where the sizes differ; identical
-    shapes mean max_batch == 1 (take src)."""
-    if dst.shape == src.shape:
-        return src.astype(dst.dtype)
-    ax = next(i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
-              if a != b)
-    return jax.lax.dynamic_update_slice_in_dim(
-        dst, src.astype(dst.dtype), slot, axis=ax)
+    # recompute-on-readmit state for a page-pool eviction: the token
+    # sequence (prompt + all-but-last emitted) the readmission prefills
+    _resume: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
 
 
 class ServingEngine:
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
-                 policy: TCPolicy = BF16):
+                 policy: TCPolicy = BF16, *, attn_impl=None):
         self.cfg = cfg
         self.scfg = scfg
         self.policy = get_policy(policy)
@@ -131,35 +141,30 @@ class ServingEngine:
             self._committed = 0
             self._slot_commit = [0] * b
             self._table = np.zeros((b, self._pmax), np.int32)
-            self.cache = init_cache(cfg, b, L, policy=self.policy,
-                                    num_pages=self.num_pages)
-            self.cache["page_table"] = jnp.asarray(self._table)
-            # prompts prefill through the ring datapath (identical codec)
-            # and their rows are scattered into pool pages at admission
-            self._prefill_policy = dataclasses.replace(
-                self.policy, kv_layout="ring",
-                name=self.policy.name + "+prefill_ring")
         else:
             self.allocator = None
-            self.cache = init_cache(cfg, b, L, policy=self.policy)
-            self._prefill_policy = self.policy
-        # true per-slot positions (both layouts)
-        self.cache["pos"] = jnp.zeros((b,), jnp.int32)
+
+        self.engine = TransprecisionEngine(
+            cfg, self.policy, b, L,
+            num_pages=self.num_pages if self.paged else None,
+            attn_impl=attn_impl)
+        self.cache = self.engine.init_decode_state()
+        if self.paged:
+            self.cache["page_table"] = jnp.asarray(self._table)
         self.slot_pos = np.zeros(b, np.int64)         # valid tokens per slot
         self.slot_req: List[Optional[Request]] = [None] * b
         self.last_tok = np.zeros((b, 1), np.int32)
-
-        self._decode = jax.jit(
-            lambda p, c, t: decode_step(p, c, t, cfg, self.policy))
-        self._prefill = jax.jit(
-            lambda p, batch: prefill(p, batch, cfg, L, self._prefill_policy))
-        # donation keeps admission from copying the whole batch cache
-        # (ignored with a warning on CPU, so only request it off-CPU)
-        donate = () if jax.default_backend() == "cpu" else (0,)
-        self._merge = jax.jit(self._merge_prefill, donate_argnums=donate)
+        # admission order per slot: a dry pool evicts the newest sequence
+        self._admit_seq = np.zeros(b, np.int64)
+        self._admit_counter = 0
+        self._evicted: List[Request] = []   # awaiting readmission
+        # streaming hook: called as on_emit(req, [tokens]) from the decode
+        # loop the moment tokens are appended (the orchestrator's detok /
+        # per-token callbacks hang off this)
+        self.on_emit: Optional[Callable[[Request, List[int]], None]] = None
         self._rng = np.random.default_rng(scfg.seed)
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
-                      "rejected": 0, "peak_live_pages": 0,
+                      "rejected": 0, "peak_live_pages": 0, "evictions": 0,
                       "kv_cache_bytes": self.kv_cache_bytes()}
 
     # ---- cache footprint ----
@@ -215,53 +220,92 @@ class ServingEngine:
                 return i
         return None
 
-    def _merge_prefill(self, cache, cache1, slot, dst_rows):
-        """Merge a single-row prefill cache into the batch cache at
-        ``slot`` — donated, touching only the per-slot leaves.
+    def free_slots(self) -> int:
+        return sum(r is None for r in self.slot_req)
 
-        Ring K/V (and recurrent/SSM/cross state) rows land via
-        ``dynamic_update_slice``; with the paged layout the prompt's K/V
-        rows are scattered into the slot's pool pages at the
-        ``dst_rows`` flat rows instead (codes are codec-identical between
-        the ring prefill and the pool, so this is a pure relayout).
-        ``dst_rows is None`` selects the ring semantics even on a paged
-        engine — the speculative draft cache is always a ring."""
-        s_len = dst_rows.shape[0] if dst_rows is not None else 0
+    def _admission_tokens(self, req: Request) -> np.ndarray:
+        """Token sequence a (re)admission must prefill: the prompt — or,
+        after a page-pool eviction, the prompt plus all-but-last emitted
+        token (the last one is the readmitted slot's next decode input)."""
+        if req._resume is not None:
+            return req._resume
+        return np.asarray(req.prompt)
 
-        def merge_block(dstb, srcb, stacked):
-            out = {}
-            for name, d in dstb.items():
-                s = srcb[name]
-                if dst_rows is not None and name in _POOL_LEAF_NAMES:
-                    if stacked:            # (P, R, ...) <- (P, 1, W, ...)
-                        rows = s[:, 0, :s_len]
-                        out[name] = d.at[:, dst_rows].set(rows.astype(d.dtype))
-                    else:                  # (R, ...) <- (1, W, ...)
-                        out[name] = d.at[dst_rows].set(
-                            s[0, :s_len].astype(d.dtype))
-                else:
-                    out[name] = _slot_update(d, s, slot)
-            return out
+    def _reserve(self, req: Request) -> Optional[Tuple[int, Any]]:
+        """Host-side half of admission: claim a slot and (paged layout)
+        the prompt's pool pages.  Returns (slot, prompt dst rows) or None
+        when no slot / pages are free right now."""
+        toks = self._admission_tokens(req)
+        n = len(toks)
+        if n >= self.scfg.max_len:
+            raise ValueError(f"prompt length {n} >= max_len "
+                             f"{self.scfg.max_len}; reject before admission")
+        slot = self._free_slot()
+        if slot is None:
+            return None
+        dst_rows = None
+        if self.paged:
+            ps = self.allocator.page_size
+            if self.scfg.page_overcommit:
+                worst = 0   # admit on current demand; dry pool evicts
+            else:
+                # admission control reserves the worst case this request
+                # can grow to; allocation itself stays on-demand (live
+                # bytes track actual tokens), and the reservation
+                # invariant guarantees the growth allocs in step() can
+                # never fail
+                worst = self._worst_pages(req)
+                if self._committed + worst > self.num_pages - 1:
+                    return None
+            pages = self.allocator.alloc(pages_for(n + 1, ps))
+            if pages is None:       # non-overcommit: unreachable under
+                return None         # the reservation invariant
+            self._committed += worst
+            self._slot_commit[slot] = worst
+            self.slot_pages[slot] = sp = SlotPages(ps, pages)
+            self._table[slot] = sp.table_row(self._pmax)
+            self.cache["page_table"] = jnp.asarray(self._table)
+            t = np.arange(n)
+            dst_rows = np.asarray(pages, np.int64)[t // ps] * ps + t % ps
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = n
+        self._admit_counter += 1
+        self._admit_seq[slot] = self._admit_counter
+        return slot, dst_rows
 
-        new_cache = dict(cache)
-        new_cache["pos"] = cache["pos"].at[slot].set(
-            jnp.max(cache1["pos"]).astype(cache["pos"].dtype))
-        new_cache["blocks"] = tuple(
-            merge_block(d, s, True)
-            for d, s in zip(cache["blocks"], cache1["blocks"]))
-        if "tail" in cache:
-            new_cache["tail"] = tuple(
-                merge_block(d, s, False)
-                for d, s in zip(cache["tail"], cache1["tail"]))
-        # any other top-level per-slot state (e.g. audio "memory", future
-        # family additions) merges generically; page_table is engine-owned
-        # and absent from the ring prefill cache
-        for name, d in cache.items():
-            if name in ("pos", "blocks", "tail", "page_table"):
-                continue
-            if name in cache1:
-                new_cache[name] = _slot_update(d, cache1[name], slot)
-        return new_cache
+    def _install(self, req: Request, slot: int, dst_rows, prefix,
+                 row: int) -> None:
+        """Device + bookkeeping half of admission: insert prefix row
+        ``row`` into ``slot``, sample the first token, finish prompt-only
+        requests."""
+        n = int(self.slot_pos[slot])
+        dst = None
+        if dst_rows is not None:
+            # pad to the prefix bucket width; padding rows land on the
+            # trash row 0
+            w = jax.tree_util.tree_leaves(
+                prefix["cache"]["blocks"])[0].shape[2]
+            dst = np.zeros(w, np.int64)
+            dst[:n] = dst_rows
+        self.cache = self.engine.insert(prefix, self.cache, slot, row,
+                                        dst_rows=dst)
+        self.stats["prefills"] += 1
+        if req._resume is not None:
+            # recompute-on-readmit: the stream already holds every token
+            # up to out_tokens[-1]; decode continues from it
+            req._resume = None
+            self.last_tok[slot, 0] = req.out_tokens[-1]
+            return
+        logits = np.asarray(prefix["logits"])[row]
+        tok = int(self._sample(logits[None], [self._req_temp(req)])[0])
+        self.last_tok[slot, 0] = tok
+        self._emit(req, [tok])
+        # prompt-only requests (max_new <= 1, or immediate EOS) finish at
+        # admission — no decode tick, slot and pages free right away
+        if (len(req.out_tokens) >= req.max_new
+                or req.out_tokens[-1] == self.scfg.eos_id):
+            req.done = True
+            self._free_request_slot(slot)
 
     def add_request(self, req: Request) -> bool:
         """Prefill ``req`` into a free slot; False if no slot (or, paged,
@@ -269,61 +313,52 @@ class ServingEngine:
         can never fit (``serve`` rejects these up front) are a caller
         error here: raising beats silently corrupting the page
         accounting."""
-        s_len = len(req.prompt)
-        if s_len >= self.scfg.max_len:
-            raise ValueError(f"prompt length {s_len} >= max_len "
-                             f"{self.scfg.max_len}; reject before admission")
-        slot = self._free_slot()
-        if slot is None:
-            return False
-        dst_rows = None
-        if self.paged:
-            ps = self.allocator.page_size
-            # admission control reserves the worst case this request can
-            # grow to; allocation itself stays on-demand (live bytes track
-            # actual tokens), and the reservation invariant guarantees the
-            # growth allocs in step() can never fail
-            worst = self._worst_pages(req)
-            if self._committed + worst > self.num_pages - 1:
-                return False
-            pages = self.allocator.alloc(pages_for(s_len + 1, ps))
-            if pages is None:       # unreachable under the invariant
-                return False
-            self._committed += worst
-            self._slot_commit[slot] = worst
-            self.slot_pages[slot] = sp = SlotPages(ps, pages)
-            self._table[slot] = sp.table_row(self._pmax)
-            self.cache["page_table"] = jnp.asarray(self._table)
-            t = np.arange(s_len)
-            dst_rows = jnp.asarray(
-                np.asarray(pages, np.int64)[t // ps] * ps + t % ps, jnp.int32)
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, cache1 = self._prefill(self.params, {"tokens": prompt})
-        self.cache = self._merge(self.cache, cache1,
-                                 jnp.asarray(slot, jnp.int32), dst_rows)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = s_len
-        self.last_tok[slot, 0] = int(self._sample(
-            np.asarray(logits), [self._req_temp(req)])[0])
-        req.out_tokens.append(int(self.last_tok[slot, 0]))
-        self.stats["prefills"] += 1
-        self.stats["tokens"] += 1
-        # prompt-only requests (max_new <= 1, or immediate EOS) finish at
-        # admission — no decode tick, slot and pages free right away
-        if (len(req.out_tokens) >= req.max_new
-                or req.out_tokens[-1] == self.scfg.eos_id):
-            req.done = True
-            self._free_request_slot(slot)
-        return True
+        return all(self.add_requests([req]))
+
+    def add_requests(self, reqs: Sequence[Request]) -> List[bool]:
+        """Batched admission: reserve a slot per request, then run ONE
+        bucketed prefill over every admitted prompt and insert per row.
+        Returns per-request admission flags; reservation stops at the
+        first request that doesn't fit (FIFO order is preserved)."""
+        toks = [self._admission_tokens(r) for r in reqs]
+        admitted: List[Tuple[Request, int, Any, int]] = []
+        ok = [False] * len(reqs)
+        for j, req in enumerate(reqs):
+            if not self.engine.bucketed and admitted:
+                break   # exact-length prefill: one prompt per call
+            r = self._reserve(req)
+            if r is None:
+                break   # no slot/pages: later entries wait for this one
+            admitted.append((req, r[0], r[1], j))
+            ok[j] = True
+        if not admitted:
+            return ok
+        if self.engine.bucketed:
+            bucket = self.engine.bucket_for(max(len(toks[j])
+                                                for _, _, _, j in admitted))
+            pad = np.zeros((len(admitted), bucket), np.int32)
+            lens = np.zeros(len(admitted), np.int32)
+            for row, (_, _, _, j) in enumerate(admitted):
+                pad[row, :len(toks[j])] = toks[j]
+                lens[row] = len(toks[j])
+            prefix = self.engine.prefill(self.params, pad, lens)
+        else:
+            (_, _, _, j0) = admitted[0]
+            prefix = self.engine.prefill(
+                self.params, np.asarray(toks[j0], np.int32)[None])
+        for row, (req, slot, dst_rows, _) in enumerate(admitted):
+            self._install(req, slot, dst_rows, prefix, row)
+        return ok
 
     def _worst_pages(self, req: Request) -> int:
-        """Worst-case page demand of ``req``: prompt + max_new tokens,
-        capped by max_len (the engine stops a slot before max_len) and
-        floored at prompt + 1 — admission always allocates a page for the
-        first decode append, so the reservation must cover it even when
-        max_new is 0."""
-        s = len(req.prompt)
-        tokens = min(max(s + req.max_new, s + 1), self.scfg.max_len)
+        """Worst-case page demand of ``req``: its admission tokens plus
+        the remaining max_new budget, capped by max_len (the engine stops
+        a slot before max_len) and floored at prompt + 1 — admission
+        always allocates a page for the first decode append, so the
+        reservation must cover it even when max_new is 0."""
+        s = len(self._admission_tokens(req))
+        remaining = max(req.max_new - len(req.out_tokens), 0)
+        tokens = min(max(s + remaining, s + 1), self.scfg.max_len)
         return pages_for(tokens, self.allocator.page_size)
 
     def _free_request_slot(self, slot: int) -> None:
@@ -340,6 +375,58 @@ class ServingEngine:
             self.cache["page_table"] = jnp.asarray(self._table)
             # park the idle slot's write position on the trash page
             self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+
+    def _evict_newest(self) -> Optional[int]:
+        """Pool-dry graceful degradation (``page_overcommit``): evict the
+        most recently admitted active sequence — free its slot and pages,
+        stash its progress for recompute-on-readmit, and requeue it.
+        Returns the freed slot, or None with nothing left to evict."""
+        cands = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not cands:
+            return None
+        slot = max(cands, key=lambda i: self._admit_seq[i])
+        req = self.slot_req[slot]
+        req._resume = np.concatenate(
+            [np.asarray(req.prompt, np.int64),
+             np.asarray(req.out_tokens[:-1], np.int64)])
+        self._free_request_slot(slot)
+        self._evicted.append(req)
+        self.stats["evictions"] += 1
+        return slot
+
+    def _grow_pages(self, active: List[int], target) -> None:
+        """Allocate pages so each active slot can write rows up to
+        ``target(i) - 1`` this tick.  Under ``page_overcommit`` a dry
+        pool evicts the newest sequence instead of raising (the evicted
+        slot may be the growing one — its ``slot_req`` goes None and the
+        caller refilters ``active``)."""
+        grew = False
+        for i in active:
+            while self.slot_req[i] is not None:
+                need = self.slot_pages[i].pages_needed(int(target(i)))
+                if not need:
+                    break
+                pages = self.allocator.alloc(need)
+                if pages is not None:
+                    self.slot_pages[i].pages.extend(pages)
+                    self._table[i] = self.slot_pages[i].table_row(self._pmax)
+                    grew = True
+                    break
+                if not self.scfg.page_overcommit:
+                    # the admission reservation makes this unreachable
+                    raise RuntimeError(
+                        "paged KV pool exhausted mid-decode — the "
+                        "admission reservation invariant was violated "
+                        "(pages allocated outside the engine?)")
+                if self._evict_newest() is None:
+                    raise RuntimeError(
+                        "paged KV pool exhausted with no sequence left "
+                        "to evict")
+                grew = True
+        if grew:
+            self.cache["page_table"] = jnp.asarray(self._table)
+        self.stats["peak_live_pages"] = max(
+            self.stats["peak_live_pages"], self.allocator.live_pages)
 
     def _req_temp(self, req: Request) -> float:
         """Resolved sampling temperature for ``req`` (per-request override
@@ -368,6 +455,14 @@ class ServingEngine:
         sampled = (c < u).sum(-1)
         return np.where(hot, sampled, greedy)
 
+    def _emit(self, req: Request, toks: List[int]) -> None:
+        """Append newly decoded tokens to ``req`` and stream them through
+        the ``on_emit`` hook."""
+        req.out_tokens.extend(toks)
+        self.stats["tokens"] += len(toks)
+        if self.on_emit is not None:
+            self.on_emit(req, toks)
+
     # ---- one decode tick for the whole batch ----
     def step(self):
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
@@ -376,26 +471,12 @@ class ServingEngine:
         if self.paged:
             # grow page lists so every active slot has a page for the
             # token this tick writes at its own position
-            grew = False
-            for i in active:
-                need = self.slot_pages[i].pages_needed(self.slot_pos[i] + 1)
-                if need:
-                    pages = self.allocator.alloc(need)
-                    if pages is None:
-                        # the admission reservation makes this unreachable
-                        raise RuntimeError(
-                            "paged KV pool exhausted mid-decode — the "
-                            "admission reservation invariant was violated "
-                            "(pages allocated outside the engine?)")
-                    self.slot_pages[i].pages.extend(pages)
-                    self._table[i] = self.slot_pages[i].table_row(self._pmax)
-                    grew = True
-            if grew:
-                self.cache["page_table"] = jnp.asarray(self._table)
-            self.stats["peak_live_pages"] = max(
-                self.stats["peak_live_pages"], self.allocator.live_pages)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(self.last_tok))
+            self._grow_pages(active, lambda i: self.slot_pos[i] + 1)
+            active = [i for i in active if self.slot_req[i] is not None]
+            if not active:
+                return
+        self.cache["tok"] = jnp.asarray(self.last_tok)
+        self.cache, logits = self.engine.generate(self.params, self.cache)
         temps = np.asarray([0.0 if r is None else self._req_temp(r)
                             for r in self.slot_req], np.float32)
         toks = self._sample(np.asarray(logits), temps)
@@ -403,10 +484,9 @@ class ServingEngine:
         for i in active:
             req = self.slot_req[i]
             tok = int(toks[i])
-            req.out_tokens.append(tok)
             self.last_tok[i, 0] = tok
             self.slot_pos[i] += 1
-            self.stats["tokens"] += 1
+            self._emit(req, [tok])
             eos = self.scfg.eos_id
             if (len(req.out_tokens) >= req.max_new
                     or (eos is not None and tok == eos)
@@ -418,12 +498,19 @@ class ServingEngine:
         """Why ``req`` can NEVER be admitted (None = admissible once a
         slot/pages free up).  Subclasses add checks (the speculative
         engine needs chunk headroom and greedy sampling)."""
-        if len(req.prompt) >= self.scfg.max_len:
-            return (f"prompt length {len(req.prompt)} >= "
+        n = len(self._admission_tokens(req))
+        if n >= self.scfg.max_len:
+            return (f"prompt length {n} >= "
                     f"max_len {self.scfg.max_len}")
-        if self.paged and self._worst_pages(req) > self.num_pages - 1:
-            return ("request worst case needs more pages than the "
-                    f"pool holds ({self.num_pages - 1} allocatable)")
+        if self.paged:
+            if self.scfg.page_overcommit:
+                if pages_for(n + 1, self.allocator.page_size) \
+                        > self.num_pages - 1:
+                    return ("prompt alone needs more pages than the "
+                            f"pool holds ({self.num_pages - 1} allocatable)")
+            elif self._worst_pages(req) > self.num_pages - 1:
+                return ("request worst case needs more pages than the "
+                        f"pool holds ({self.num_pages - 1} allocatable)")
         return None
 
     def _admit(self, queue: List[Request]) -> None:
@@ -452,8 +539,12 @@ class ServingEngine:
         queue = list(requests)
         t0 = time.time()
         ticks = 0
-        while (queue or any(r is not None for r in self.slot_req)) \
+        while (queue or self._evicted
+               or any(r is not None for r in self.slot_req)) \
                 and ticks < max_ticks:
+            if self._evicted:   # evicted sequences readmit first (oldest)
+                queue[0:0] = self._evicted
+                self._evicted.clear()
             self._admit(queue)
             self.step()
             ticks += 1

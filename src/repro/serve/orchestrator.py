@@ -1,0 +1,297 @@
+"""Async serving orchestrator over the three-stage engine API.
+
+The engine (:mod:`repro.serve.engine`) is a synchronous slot machine:
+``add_requests`` prefills+inserts, ``step`` generates one round for every
+active slot.  This module wraps it JetStream-style with the HOST-side
+concerns a real serving deployment has, overlapped with device compute on
+background threads:
+
+* a **submission queue** with backpressure — a bounded semaphore caps the
+  number of requests in flight (queued + decoding); ``submit`` blocks up
+  to an admission timeout and returns ``False`` instead of growing the
+  queue without bound;
+* a **scheduler thread** that drains submissions, groups compatible
+  prompts into one bucketed-length prefill batch (``engine.add_requests``
+  right-pads to a shared power-of-two bucket), runs the free-slot decode
+  loop, requeues pool-dry evictions at the front of the line, and retires
+  finished slots;
+* a **detokenizer thread** that turns emitted token batches into text and
+  fires per-token streaming callbacks, so Python-side string work never
+  blocks the next ``generate`` dispatch.
+
+Tokenisation is pluggable (``tokenize``/``detokenize`` callables); the
+default is a byte-level codec clipped to the model vocab, which is enough
+for the synthetic-data models this repo trains.  Timing is recorded
+host-side per emission (`submit`/first-token/finish monotonic stamps), so
+the serving benchmark can derive TTFT and inter-token latency percentiles
+without touching the engine.
+
+Threading contract: the engine is only ever touched from the scheduler
+thread; ``submit``/``wait`` are safe from any thread.  Callbacks run on
+the detokenizer thread and must not call back into the orchestrator
+(except ``submit``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from .engine import Request, ServingEngine
+
+__all__ = ["OrchestratorConfig", "StreamingRequest", "Orchestrator"]
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    """Host-side serving knobs (the device-side ones live in ServeConfig).
+
+    max_queue: backpressure cap on requests in flight (queued + active).
+    admission_timeout_s: default ``submit`` blocking time once the queue
+        is full; ``submit`` returns False on expiry instead of enqueueing.
+    batch_window_s: how long the scheduler lingers after the first
+        pending prompt to coalesce more arrivals into one bucketed
+        prefill batch (0 = admit immediately).
+    poll_interval_s: scheduler sleep when there is nothing to do.
+    detokenize: decode emitted tokens to text on the detokenizer thread
+        (False streams token ids only; text fields stay empty).
+    """
+    max_queue: int = 64
+    admission_timeout_s: float = float("inf")
+    batch_window_s: float = 0.0
+    poll_interval_s: float = 0.001
+    detokenize: bool = True
+
+
+@dataclasses.dataclass(eq=False)
+class StreamingRequest:
+    """One streaming generation request.
+
+    ``prompt`` may be text (tokenized host-side) or a token-id sequence.
+    ``on_token(sreq, token_ids, text_piece)`` fires on the detokenizer
+    thread once per emission batch — batches hold >1 token under
+    speculative decoding because accepted drafts commit together.
+    """
+    prompt: Union[str, Sequence[int]]
+    max_new: int = 32
+    temperature: Optional[float] = None   # None inherits ServeConfig's
+    on_token: Optional[Callable[["StreamingRequest", List[int], str], None]] = None
+
+    # outputs / telemetry (filled in by the orchestrator)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    out_text: str = ""
+    error: Optional[str] = None
+    submit_t: float = 0.0
+    token_t: List[float] = dataclasses.field(default_factory=list)
+    finish_t: float = 0.0
+    _req: Optional[Request] = dataclasses.field(default=None, repr=False)
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the stream finishes; True if it did."""
+        return self._done.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit-to-first-token latency, once at least one token landed."""
+        return self.token_t[0] - self.submit_t if self.token_t else None
+
+    def itl_s(self) -> List[float]:
+        """Inter-token gaps (speculative batches share one stamp → 0s)."""
+        return [b - a for a, b in zip(self.token_t, self.token_t[1:])]
+
+
+def _default_tokenize(vocab: int) -> Callable[[str], List[int]]:
+    def tok(text: str) -> List[int]:
+        return [min(b, vocab - 1) for b in text.encode("utf-8")]
+    return tok
+
+
+def _default_detokenize(vocab: int) -> Callable[[List[int]], str]:
+    del vocab
+    def detok(toks: List[int]) -> str:
+        return bytes(t % 256 for t in toks).decode("utf-8", errors="replace")
+    return detok
+
+
+class Orchestrator:
+    """Threaded request orchestrator over a ServingEngine.
+
+    Usage::
+
+        with Orchestrator(engine) as orch:
+            sreq = StreamingRequest("hello", max_new=16,
+                                    on_token=lambda r, ids, s: print(s))
+            assert orch.submit(sreq)
+            sreq.wait()
+    """
+
+    def __init__(self, engine: ServingEngine,
+                 ocfg: OrchestratorConfig = OrchestratorConfig(), *,
+                 tokenize: Optional[Callable[[str], List[int]]] = None,
+                 detokenize: Optional[Callable[[List[int]], str]] = None):
+        if ocfg.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {ocfg.max_queue}")
+        self.engine = engine
+        self.ocfg = ocfg
+        vocab = engine.cfg.vocab
+        self.tokenize = tokenize or _default_tokenize(vocab)
+        self.detokenize = detokenize or _default_detokenize(vocab)
+
+        self._slots = threading.BoundedSemaphore(ocfg.max_queue)
+        self._submitted: "queue.Queue[StreamingRequest]" = queue.Queue()
+        self._stream_q: "queue.Queue[tuple]" = queue.Queue()
+        self._by_req: Dict[int, StreamingRequest] = {}  # id(Request) -> sreq
+        self._closed = False
+        self._uid = 0
+        self._stop = threading.Event()
+        self.stats = {"submitted": 0, "finished": 0, "rejected": 0,
+                      "admission_timeouts": 0}
+
+        engine.on_emit = self._on_emit       # runs on the scheduler thread
+        self._sched = threading.Thread(target=self._scheduler_loop,
+                                       name="orch-scheduler", daemon=True)
+        self._detok = threading.Thread(target=self._detok_loop,
+                                       name="orch-detok", daemon=True)
+        self._sched.start()
+        self._detok.start()
+
+    # ---- submission side (any thread) ----
+    def submit(self, sreq: StreamingRequest,
+               timeout: Optional[float] = None) -> bool:
+        """Enqueue a request; False if backpressure held past ``timeout``
+        (default: the config admission timeout)."""
+        if self._closed:
+            raise RuntimeError("orchestrator is closed")
+        if timeout is None:
+            timeout = self.ocfg.admission_timeout_s
+        blocking = timeout > 0
+        if not self._slots.acquire(
+                blocking,
+                None if timeout == float("inf") or not blocking else timeout):
+            self.stats["admission_timeouts"] += 1
+            return False
+        sreq.submit_t = time.monotonic()
+        self.stats["submitted"] += 1
+        self._submitted.put(sreq)
+        return True
+
+    # ---- scheduler thread ----
+    def _on_emit(self, req: Request, toks: List[int]) -> None:
+        sreq = self._by_req.get(id(req))
+        if sreq is None:
+            return
+        now = time.monotonic()
+        sreq.token_t.extend([now] * len(toks))
+        self._stream_q.put(("toks", sreq, list(toks)))
+
+    def _finish(self, sreq: StreamingRequest, error: Optional[str] = None):
+        sreq.error = error
+        sreq.finish_t = time.monotonic()
+        self.stats["rejected" if error else "finished"] += 1
+        self._stream_q.put(("done", sreq))
+        self._slots.release()
+
+    def _scheduler_loop(self) -> None:
+        eng, ocfg = self.engine, self.ocfg
+        pending: deque = deque()
+        while True:
+            # pull new submissions; filter out the never-admissible
+            fresh = False
+            while True:
+                try:
+                    sreq = self._submitted.get_nowait()
+                except queue.Empty:
+                    break
+                sreq._req = self._to_engine_request(sreq)
+                reject = eng._reject_reason(sreq._req)
+                if reject is not None:
+                    self._finish(sreq, error=reject)
+                    continue
+                self._by_req[id(sreq._req)] = sreq
+                pending.append(sreq)
+                fresh = True
+            # pool-dry evictions resume at the head of the line
+            if eng._evicted:
+                evicted, eng._evicted = eng._evicted, []
+                for r in reversed(evicted):
+                    pending.appendleft(self._by_req[id(r)])
+            if fresh and ocfg.batch_window_s > 0 and eng.free_slots():
+                time.sleep(ocfg.batch_window_s)   # coalesce one batch
+                continue
+            # bucketed admission: one shared-bucket prefill per batch
+            if pending and eng.free_slots():
+                batch = [pending.popleft()
+                         for _ in range(min(len(pending), eng.free_slots()))]
+                ok = eng.add_requests([s._req for s in batch])
+                failed = [s for s, admitted in zip(batch, ok) if not admitted]
+                for s in reversed(failed):    # infeasible right now: retry
+                    pending.appendleft(s)     # in FIFO order next tick
+            active = any(r is not None for r in eng.slot_req)
+            if active:
+                eng.step()
+            # retire finished requests (admission can finish prompt-only
+            # requests too, so scan the full map)
+            done_ids = [rid for rid, s in self._by_req.items()
+                        if s._req.done and s not in pending]
+            for rid in done_ids:
+                s = self._by_req.pop(rid)
+                self._finish(s, error=s._req.error)
+            if self._stop.is_set() and not pending and not active \
+                    and self._submitted.empty() and not eng._evicted:
+                self._stream_q.put(("stop",))
+                return
+            if not active and not pending:
+                time.sleep(ocfg.poll_interval_s)
+
+    def _to_engine_request(self, sreq: StreamingRequest) -> Request:
+        toks = (self.tokenize(sreq.prompt)
+                if isinstance(sreq.prompt, str) else
+                [int(t) for t in sreq.prompt])
+        self._uid += 1
+        return Request(uid=self._uid, prompt=np.asarray(toks, np.int32),
+                       max_new=sreq.max_new, temperature=sreq.temperature)
+
+    # ---- detokenizer thread ----
+    def _detok_loop(self) -> None:
+        while True:
+            item = self._stream_q.get()
+            if item[0] == "stop":
+                return
+            if item[0] == "done":
+                item[1]._done.set()
+                continue
+            _, sreq, toks = item
+            sreq.out_tokens.extend(toks)
+            piece = ""
+            if self.ocfg.detokenize:
+                piece = self.detokenize(toks)
+                sreq.out_text += piece
+            if sreq.on_token is not None:
+                sreq.on_token(sreq, toks, piece)
+
+    # ---- lifecycle ----
+    def close(self, timeout: Optional[float] = 60.0) -> None:
+        """Drain in-flight work, then stop both threads."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._sched.join(timeout)
+        self._detok.join(timeout)
+
+    def __enter__(self) -> "Orchestrator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -2,18 +2,20 @@
 
 The paper's TALU switches precision at runtime on ONE datapath; the
 serving-side analogue is to run the SAME weights twice per chunk at two
-precisions: ``gamma`` cheap autoregressive *draft* steps under a derived
-low-precision policy (posit8 weight compute + posit8 KV ring by default,
-``core.transprecision.draft_policy``), then ONE *verify* pass under the
-full-precision target policy that scores all gamma+1 chunk positions at
-once (``models.serve_model.verify_step``).  Draft tokens that match the
+precisions: up to ``gamma`` cheap autoregressive *draft* steps under a
+derived low-precision policy (posit8 weight compute + posit8 KV ring by
+default, ``core.transprecision.draft_policy``), then ONE *verify* pass
+under the full-precision target policy that scores all chunk positions at
+once (the engine API's ``verify`` stage).  Draft tokens that match the
 target's greedy choice commit; the first mismatch yields the target's own
 token as a free bonus, and the speculatively written K/V rows past the
 commit point are **rolled back**:
 
 * ring layout — rewind the per-slot ``pos`` vector and scrub the
-  rolled-back code/scale rows to their init values, so the cache is
-  bit-identical to one that never drafted;
+  rolled-back code/scale rows to their init values.  Scatter form: only
+  the fixed-size window of rows the round wrote is touched — O(B·gamma)
+  rows per round, independent of ``max_len``
+  (``engine_api.rollback_ring_cache``);
 * paged layout — truncate the slot's page list to the committed length,
   return orphaned pages through the refcounted allocator, and scrub the
   rolled-back pool rows.
@@ -24,27 +26,24 @@ speculative decode emits token-for-token the same stream as baseline
 greedy decode — the draft precision only moves the ACCEPTANCE RATE, i.e.
 how many target-model steps each emitted token costs, never the output.
 
+Near the cache cap the chunk *shrinks dynamically*: a round's chunk is
+``T = min(gamma + 1, min_i(max_len - pos_i))`` over the active slots, so
+slots decode all the way to ``max_len - 1`` and cap-truncated streams are
+token-identical to baseline (admission needs one extra row of headroom:
+prompts longer than ``max_len - 2`` are rejected, vs baseline's
+``max_len - 1``).
+
 Draft-cache lifecycle: the draft ring mirrors the committed prefix.  When
 every draft in a round is accepted the draft cache is one committed row
 short (the last draft token was never fed through the draft model); that
 slot's next round spends its first draft step catching up (output
-discarded) and proposes gamma-1 tokens instead of gamma.  Lag never
-exceeds one row.
+discarded) and proposes one fewer token.  Lag never exceeds one row.
 
-Known boundary semantics (vs the baseline engine):
-
-* near the CACHE cap a verify chunk needs gamma+1 rows of headroom, so a
-  slot finishes once ``slot_pos > max_len - (gamma+1)`` — up to gamma
-  tokens earlier than baseline's ``max_len - 1`` stop.  Streams are
-  token-identical whenever generation is ``max_new``-bound (the normal
-  serving regime); cap-truncated requests end a little shorter.  A
-  dynamic chunk shrink for the last rounds is a ROADMAP follow-on.
-* stream identity is bit-exact on the CPU/reference backend (what CI
-  pins).  On accelerators the baseline decode reads through the fused
-  Pallas kernels while the verify chunk reads through gather+decode XLA
-  attention — different summation orders, so near-tied logits could in
-  principle argmax differently until the fused chunk-verify kernel
-  (ROADMAP) lands.
+Stream identity is bit-exact on the CPU/reference backend (what CI pins).
+On accelerators the baseline decode reads through the fused Pallas
+kernels while the verify chunk reads through gather+decode XLA attention
+— different summation orders, so near-tied logits could in principle
+argmax differently until the fused chunk-verify kernel (ROADMAP) lands.
 """
 from __future__ import annotations
 
@@ -56,89 +55,24 @@ import numpy as np
 
 from ..core.transprecision import BF16, TCPolicy, draft_policy
 from ..models import lm
-from ..models.serve_model import (decode_step, init_cache, prefill,
-                                  verify_step)
 from .engine import Request, ServeConfig, ServingEngine
+from .engine_api import (TransprecisionEngine, rollback_paged_cache,
+                         rollback_ring_cache)
 from .paged import pages_for
 
-_SCRUB_LEAVES = ("k", "v", "k_scale", "v_scale")
-
-
-def rollback_ring_cache(cache, new_pos, old_pos):
-    """Rewind a ring-layout cache: set ``pos`` to ``new_pos`` (B,) and
-    scrub every attention K/V row in [new_pos, old_pos) back to its init
-    value (codes/floats 0, scales 1.0) — bit-identical to a cache that
-    never wrote those rows.  No wraparound: row index == position, which
-    ``verify_step`` guarantees by refusing sliding-window configs."""
-    new = jnp.asarray(new_pos, jnp.int32)
-    old = jnp.asarray(old_pos, jnp.int32)
-
-    def scrub_block(blk, stacked):
-        # blocks leaves carry a leading period-stack axis (P, B, W, ...);
-        # tail leaves are plain (B, W, ...)
-        out = dict(blk)
-        for name in _SCRUB_LEAVES:
-            if name not in blk:
-                continue
-            leaf = blk[name]
-            w = leaf.shape[2 if stacked else 1]
-            ar = jnp.arange(w, dtype=jnp.int32)[None, :]
-            mask = (ar >= new[:, None]) & (ar < old[:, None])   # (B, W)
-            lead = (1,) if stacked else ()
-            trail = (1,) * (leaf.ndim - len(lead) - 2)
-            mask = mask.reshape(lead + mask.shape + trail)
-            init = 1.0 if name.endswith("_scale") else 0
-            out[name] = jnp.where(mask, jnp.asarray(init, leaf.dtype), leaf)
-        return out
-
-    new_cache = dict(cache)
-    new_cache["blocks"] = tuple(scrub_block(b, True) for b in cache["blocks"])
-    if "tail" in cache:
-        new_cache["tail"] = tuple(scrub_block(b, False)
-                                  for b in cache["tail"])
-    new_cache["pos"] = new
-    return new_cache
-
-
-def rollback_paged_cache(cache, new_pos, scrub_rows):
-    """Rewind a paged-layout cache: set ``pos`` to ``new_pos`` (B,) and
-    scrub the flat pool rows in ``scrub_rows`` (fixed-size (N,) i32,
-    padded with trash row 0 — writes there are benign by construction)
-    back to init values.  Page-table truncation and allocator frees are
-    the engine's host-side half of the rollback."""
-    rows = jnp.asarray(scrub_rows, jnp.int32)
-
-    def scrub_block(blk, stacked):
-        # blocks pool leaves carry a leading period-stack axis (P, R, ...);
-        # tail leaves are plain (R, ...)
-        out = dict(blk)
-        for name in _SCRUB_LEAVES:
-            if name not in blk:
-                continue
-            leaf = blk[name]
-            init = jnp.asarray(1.0 if name.endswith("_scale") else 0,
-                               leaf.dtype)
-            out[name] = (leaf.at[:, rows].set(init) if stacked
-                         else leaf.at[rows].set(init))
-        return out
-
-    new_cache = dict(cache)
-    new_cache["blocks"] = tuple(scrub_block(b, True) for b in cache["blocks"])
-    if "tail" in cache:
-        new_cache["tail"] = tuple(scrub_block(b, False)
-                                  for b in cache["tail"])
-    new_cache["pos"] = jnp.asarray(new_pos, jnp.int32)
-    return new_cache
+__all__ = ["SpeculativeEngine", "rollback_ring_cache",
+           "rollback_paged_cache"]
 
 
 class SpeculativeEngine(ServingEngine):
     """Continuous-batching engine with self-speculative greedy decode.
 
-    Per round (one ``step()``): gamma lockstep draft ``decode_step``s
-    under the draft policy, one ``verify_step`` under the target policy,
-    per-slot acceptance, KV rollback.  Greedy-only: requests whose
-    resolved temperature is > 0 are rejected at admission (acceptance
-    compares argmax streams; stochastic acceptance is a follow-on).
+    Per round (one ``step()``): up to gamma lockstep draft ``generate``
+    steps on a draft-policy engine, one ``verify`` chunk on the target
+    engine, per-slot acceptance, KV rollback.  Greedy-only: requests
+    whose resolved temperature is > 0 are rejected at admission
+    (acceptance compares argmax streams; stochastic acceptance is a
+    follow-on).
     """
 
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
@@ -155,31 +89,21 @@ class SpeculativeEngine(ServingEngine):
                 f"rewind); {cfg.name} is not one")
         super().__init__(cfg, params, scfg, policy)
         self.gamma = gamma
-        self._T = gamma + 1                     # verify chunk length
-        if scfg.max_len <= self._T:
-            raise ValueError(f"max_len {scfg.max_len} leaves no room for a "
-                             f"gamma+1 = {self._T} verify chunk")
+        self._T = gamma + 1                     # max verify chunk length
+        if scfg.max_len <= 2:
+            raise ValueError(f"max_len {scfg.max_len} leaves no room for "
+                             "a verify chunk")
         self.draft = draft_policy(self.policy, weights_fmt=draft_weights_fmt,
                                   kv_format=draft_kv_format)
         b, L = scfg.max_batch, scfg.max_len
-        self.draft_cache = init_cache(cfg, b, L, policy=self.draft)
-        self.draft_cache["pos"] = jnp.zeros((b,), jnp.int32)
+        # the draft runs its own three-stage engine over a dense ring
+        self.draft_engine = TransprecisionEngine(cfg, self.draft, b, L)
+        self.draft_cache = self.draft_engine.init_decode_state()
         self.draft_pos = np.zeros(b, np.int64)  # committed draft rows/slot
         # committed token the draft cache is missing (all-accepted rounds
         # leave the draft one row behind); None = in sync
         self._lag_tok: List[Optional[int]] = [None] * b
 
-        self._draft_decode = jax.jit(
-            lambda p, c, t: decode_step(p, c, t, cfg, self.draft))
-        self._draft_prefill = jax.jit(
-            lambda p, batch: prefill(p, batch, cfg, L, self.draft))
-        self._verify = jax.jit(
-            lambda p, c, t: verify_step(p, c, t, cfg, self.policy))
-        donate = () if jax.default_backend() == "cpu" else (0,)
-        self._draft_merge = jax.jit(self._merge_prefill,
-                                    donate_argnums=donate)
-        self._rb_ring = jax.jit(rollback_ring_cache, donate_argnums=donate)
-        self._rb_paged = jax.jit(rollback_paged_cache, donate_argnums=donate)
         self.stats.update(spec_rounds=0, draft_steps=0, drafts_proposed=0,
                           drafts_accepted=0)
         # the draft ring is real HBM: re-report the footprint including it
@@ -209,10 +133,10 @@ class SpeculativeEngine(ServingEngine):
         r = super()._reject_reason(req)
         if r is not None:
             return r
-        if len(req.prompt) > self.scfg.max_len - self._T:
-            return (f"prompt length {len(req.prompt)} > max_len - (gamma+1)"
-                    f" = {self.scfg.max_len - self._T}: no room for a "
-                    "verify chunk")
+        if len(self._admission_tokens(req)) > self.scfg.max_len - 2:
+            return (f"prompt length {len(req.prompt)} > max_len - 2 = "
+                    f"{self.scfg.max_len - 2}: no row of verify-chunk "
+                    "headroom")
         if self._req_temp(req) > 0:
             return ("speculative decoding is greedy-only; set "
                     "Request.temperature=0 (or serve through the baseline "
@@ -221,18 +145,39 @@ class SpeculativeEngine(ServingEngine):
 
     def _worst_pages(self, req: Request) -> int:
         """Worst-case page demand including the verify chunk's transient
-        rows: a round may write gamma+1 rows past the committed length
-        before rolling back, so the reservation covers committed + T."""
-        s = len(req.prompt)
-        tokens = min(max(s + req.max_new, s + 1) + self._T,
+        rows: a round may write up to gamma+1 rows past the committed
+        length before rolling back, so the reservation covers
+        committed + T."""
+        s = len(self._admission_tokens(req))
+        remaining = max(req.max_new - len(req.out_tokens), 0)
+        tokens = min(max(s + remaining, s + 1) + self._T,
                      self.scfg.max_len)
         return pages_for(tokens, self.allocator.page_size)
+
+    def _free_request_slot(self, slot: int) -> None:
+        super()._free_request_slot(slot)
+        self.draft_pos[slot] = 0
+        self._lag_tok[slot] = None
+
+    def add_requests(self, reqs: List[Request]) -> List[bool]:
+        # each admission needs its own draft prefill; route the batched
+        # entry point through add_request (no bucketed batch prefill on
+        # the speculative path yet)
+        ok: List[bool] = []
+        for r in reqs:
+            admitted = self.add_request(r)
+            ok.append(admitted)
+            if not admitted:
+                break
+        ok.extend([False] * (len(reqs) - len(ok)))
+        return ok
 
     def add_request(self, req: Request) -> bool:
         reject = self._reject_reason(req)
         if reject is not None:
             raise ValueError(f"{reject}; reject before admission")
-        if not super().add_request(req):
+        toks = np.asarray(self._admission_tokens(req))  # before _install
+        if not all(ServingEngine.add_requests(self, [req])):
             return False
         slot = next((i for i, r in enumerate(self.slot_req) if r is req),
                     None)
@@ -240,11 +185,14 @@ class SpeculativeEngine(ServingEngine):
             return True
         # draft-cache lifecycle: mirror the prompt into the draft ring so
         # round 1 drafts from the same committed prefix as the target
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        _, dc1 = self._draft_prefill(self.params, {"tokens": prompt})
-        self.draft_cache = self._draft_merge(
-            self.draft_cache, dc1, jnp.asarray(slot, jnp.int32), None)
-        self.draft_pos[slot] = len(req.prompt)
+        n = len(toks)
+        bucket = self.draft_engine.bucket_for(n)
+        pad = np.zeros((1, bucket), np.int32)
+        pad[0, :n] = toks
+        dpfx = self.draft_engine.prefill(self.params, pad, [n])
+        self.draft_cache = self.draft_engine.insert(dpfx, self.draft_cache,
+                                                    slot)
+        self.draft_pos[slot] = n
         self._lag_tok[slot] = None
         return True
 
@@ -253,7 +201,15 @@ class SpeculativeEngine(ServingEngine):
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
-        b, gamma, T = self.scfg.max_batch, self.gamma, self._T
+        b = self.scfg.max_batch
+        # dynamic chunk shrink at the cache cap: the round's chunk must
+        # fit every active slot's remaining rows, so slots decode all the
+        # way to max_len - 1 exactly like baseline (admission keeps
+        # pos <= max_len - 2 while active, so T >= 2)
+        T = min(self._T,
+                int(min(self.scfg.max_len - self.slot_pos[i]
+                        for i in active)))
+        gamma = T - 1
         pre_pos = self.slot_pos.copy()          # committed rows per slot
         pre_draft = self.draft_pos.copy()
 
@@ -269,8 +225,9 @@ class SpeculativeEngine(ServingEngine):
             else:
                 cur[i, 0] = self.last_tok[i, 0]
         for s in range(gamma):
-            logits_d, self.draft_cache = self._draft_decode(
-                self.params, self.draft_cache, jnp.asarray(cur))
+            self.draft_cache["tok"] = jnp.asarray(cur)
+            self.draft_cache, logits_d = self.draft_engine.generate(
+                self.params, self.draft_cache)
             toks = np.asarray(logits_d)[:, : self.cfg.vocab].argmax(-1)
             self.stats["draft_steps"] += 1
             for i in active:
@@ -290,29 +247,16 @@ class SpeculativeEngine(ServingEngine):
             chunk[i, 0] = self.last_tok[i, 0]
             chunk[i, 1:1 + nprop[i]] = proposals[i, : nprop[i]]
         if self.paged:
-            grew = False
-            for i in active:
-                need = self.slot_pages[i].pages_needed(self.slot_pos[i] + T)
-                if need:
-                    pages = self.allocator.alloc(need)
-                    if pages is None:
-                        raise RuntimeError(
-                            "paged KV pool exhausted before a verify chunk "
-                            "— the speculative reservation invariant was "
-                            "violated")
-                    self.slot_pages[i].pages.extend(pages)
-                    self._table[i] = self.slot_pages[i].table_row(self._pmax)
-                    grew = True
-            if grew:
-                self.cache["page_table"] = jnp.asarray(self._table)
-            self.stats["peak_live_pages"] = max(
-                self.stats["peak_live_pages"], self.allocator.live_pages)
+            self._grow_pages(active, lambda i: self.slot_pos[i] + T)
+            active = [i for i in active if self.slot_req[i] is not None]
+            if not active:
+                return
         # page lists as of the verify write extent (rollback scrubs
         # against these, BEFORE truncation/free)
         old_pages = ([list(self.slot_pages[i].pages) for i in range(b)]
                      if self.paged else None)
-        logits_v, self.cache = self._verify(self.params, self.cache,
-                                            jnp.asarray(chunk))
+        self.cache, logits_v = self.engine.verify(self.params, self.cache,
+                                                  chunk)
         g = np.asarray(logits_v)[..., : self.cfg.vocab].argmax(-1)  # (B, T)
         self.stats["decode_steps"] += 1
         self.stats["spec_rounds"] += 1
@@ -325,8 +269,11 @@ class SpeculativeEngine(ServingEngine):
             while k < n and proposals[i, k] == g[i, k]:
                 k += 1
             # emission budget: keep the stream identical to baseline
-            # greedy, which stops at exactly max_new tokens
-            k = min(k, req.max_new - len(req.out_tokens) - 1)
+            # greedy, which stops at exactly max_new tokens and frees the
+            # slot once pos reaches max_len - 1 (post-emission check, so
+            # at least one token always lands)
+            cap = max(int(self.scfg.max_len - 1 - pre_pos[i]), 1)
+            k = min(k, req.max_new - len(req.out_tokens) - 1, cap - 1)
             emitted = [int(t) for t in proposals[i, :k]] + [int(g[i, k])]
             eos = self.scfg.eos_id
             if eos is not None and eos in emitted:
@@ -334,10 +281,9 @@ class SpeculativeEngine(ServingEngine):
             # emitted tokens are accepted drafts plus (unless an EOS draft
             # truncated the list first) one non-draft bonus token
             self.stats["drafts_accepted"] += min(len(emitted), k)
-            req.out_tokens.extend(emitted)
-            self.stats["tokens"] += len(emitted)
             self.last_tok[i, 0] = emitted[-1]
             self.slot_pos[i] = pre_pos[i] + len(emitted)
+            self._emit(req, emitted)
             # draft sync: rows the draft holds for the committed prefix
             drafted_rows = pre_draft[i] + gamma
             self.draft_pos[i] = min(drafted_rows, self.slot_pos[i])
@@ -345,11 +291,9 @@ class SpeculativeEngine(ServingEngine):
             self._lag_tok[i] = int(chunk[i, k]) if lag else None
             if (len(req.out_tokens) >= req.max_new
                     or (eos is not None and emitted[-1] == eos)
-                    or self.slot_pos[i] > self.scfg.max_len - T):
+                    or self.slot_pos[i] >= self.scfg.max_len - 1):
                 req.done = True
-                self._free_request_slot(i)      # resets slot_pos/draft state
-                self.draft_pos[i] = 0
-                self._lag_tok[i] = None
+                self._free_request_slot(i)      # resets slot + draft state
 
         # ---- KV rollback: target cache ----
         new_pos = self.slot_pos.copy()          # post-free (0 for done/idle)
@@ -374,10 +318,27 @@ class SpeculativeEngine(ServingEngine):
                     truncated = True
             if truncated:
                 self.cache["page_table"] = jnp.asarray(self._table)
-            self.cache = self._rb_paged(self.cache, new_pos,
-                                        jnp.asarray(scrub, jnp.int32))
+            self.cache = self.engine.rollback_paged(self.cache, new_pos,
+                                                    scrub)
         else:
-            self.cache = self._rb_ring(self.cache, new_pos, pre_pos + T)
+            # scatter form: only the T rows this round wrote per slot.
+            # Freed slots skip the scrub (their rows are rewritten before
+            # any read on readmission); idle slots no-op.
+            window_end = np.full(b, T, np.int64)
+            scrub_from = window_end.copy()
+            for i in active:
+                window_end[i] = pre_pos[i] + T
+                scrub_from[i] = (self.slot_pos[i]
+                                 if self.slot_req[i] is not None
+                                 else window_end[i])
+            self.cache = self.engine.rollback_ring(
+                self.cache, new_pos, window_end, scrub_from, T)
         # ---- KV rollback: draft ring (always ring layout) ----
-        self.draft_cache = self._rb_ring(self.draft_cache, self.draft_pos,
-                                         pre_draft + gamma)
+        d_end = np.full(b, gamma, np.int64)
+        d_from = d_end.copy()
+        for i in active:
+            d_end[i] = pre_draft[i] + gamma
+            d_from[i] = (self.draft_pos[i] if self.slot_req[i] is not None
+                         else d_end[i])
+        self.draft_cache = self.draft_engine.rollback_ring(
+            self.draft_cache, self.draft_pos, d_end, d_from, gamma)

@@ -1,0 +1,250 @@
+"""Golden-stream tests for the disaggregated three-stage engine API.
+
+The refactor contract: driving ``TransprecisionEngine.prefill`` →
+``insert`` → ``generate`` by hand emits token-for-token the stream the
+``ServingEngine`` driver (and, for f32, a full-context ``lm.forward``
+argmax loop) produces — on both KV layouts and across storage formats —
+and the paged prefix never materialises an intermediate max_len ring
+cache (the bucket-width Prefix is scattered straight into pool pages).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.engine_api import TransprecisionEngine, rollback_ring_cache
+from repro.serve.paged import PageAllocator, SlotPages, pages_for
+from repro.serve.speculative import SpeculativeEngine
+
+MAX_BATCH, MAX_LEN, PAGE_SIZE, MAX_NEW = 3, 64, 8, 8
+FORMATS = ("f32", "posit16", "posit8")
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n) for n in (4, 11, 7)]
+    return cfg, params, prompts
+
+
+def _scfg(layout, fmt):
+    return ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN, kv_format=fmt,
+                       kv_layout=layout,
+                       page_size=PAGE_SIZE if layout == "paged" else None)
+
+
+def _serve_ref(cfg, params, scfg, prompts, max_new=MAX_NEW):
+    eng = ServingEngine(cfg, params, scfg)
+    reqs = [Request(uid=i, prompt=np.asarray(p, np.int32), max_new=max_new)
+            for i, p in enumerate(prompts)]
+    eng.serve(reqs)
+    return eng, [list(r.out_tokens) for r in reqs]
+
+
+def _bucketed_prefix(engine, params, prompts):
+    lens = [len(p) for p in prompts]
+    bucket = engine.bucket_for(max(lens))
+    toks = np.zeros((len(prompts), bucket), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+    return engine.prefill(params, toks, lens), bucket
+
+
+def _raw_decode_loop(engine, params, state, prefix_logits, max_new):
+    """First token from the prefix logits, the rest from generate ticks."""
+    vocab = engine.cfg.vocab
+    streams = [[int(t)] for t in
+               np.asarray(prefix_logits)[:, :vocab].argmax(-1)]
+    state["tok"] = jax.numpy.asarray(
+        np.asarray([[s[0]] for s in streams], np.int32))
+    for _ in range(max_new - 1):
+        state, logits = engine.generate(params, state)
+        for i, t in enumerate(np.asarray(logits)[:, :vocab].argmax(-1)):
+            streams[i].append(int(t))
+    return state, streams
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_raw_api_golden_stream_ring(smoke_model, fmt):
+    cfg, params, prompts = smoke_model
+    eng_ref, ref = _serve_ref(cfg, params, _scfg("ring", fmt), prompts)
+
+    engine = TransprecisionEngine(cfg, eng_ref.policy, MAX_BATCH, MAX_LEN)
+    state = engine.init_decode_state()
+    prefix, _ = _bucketed_prefix(engine, params, prompts)
+    for slot in range(len(prompts)):
+        state = engine.insert(prefix, state, slot, row=slot)
+    _, streams = _raw_decode_loop(engine, params, state, prefix["logits"],
+                                  MAX_NEW)
+    assert streams == ref, f"raw ring API diverged from driver ({fmt})"
+
+    if fmt == "f32":   # anchor to the model itself, not just the driver
+        for p, s in zip(prompts, ref):
+            ctx = list(map(int, p))
+            for tok in s:
+                logits, _ = lm.forward(
+                    params, {"tokens": np.asarray([ctx], np.int32)}, cfg)
+                nxt = np.asarray(logits)[0, len(ctx) - 1, : cfg.vocab]
+                assert int(np.argmax(nxt)) == tok
+                ctx.append(tok)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_raw_api_golden_stream_paged(smoke_model, fmt):
+    cfg, params, prompts = smoke_model
+    eng_ref, ref = _serve_ref(cfg, params, _scfg("paged", fmt), prompts)
+
+    engine = TransprecisionEngine(cfg, eng_ref.policy, MAX_BATCH, MAX_LEN,
+                                  num_pages=eng_ref.num_pages)
+    state = engine.init_decode_state()
+    alloc = PageAllocator(eng_ref.num_pages, PAGE_SIZE)
+    pmax = pages_for(MAX_LEN, PAGE_SIZE)
+    table = np.zeros((MAX_BATCH, pmax), np.int64)
+    prefix, bucket = _bucketed_prefix(engine, params, prompts)
+    for slot, p in enumerate(prompts):
+        n = len(p)
+        # preallocate the whole stream so the table is static in the loop
+        pages = alloc.alloc(pages_for(n + MAX_NEW + 1, PAGE_SIZE))
+        table[slot] = SlotPages(PAGE_SIZE, pages).table_row(pmax)
+        dst = np.zeros(bucket, np.int64)      # bucket pad -> trash row 0
+        t = np.arange(n)
+        dst[:n] = np.asarray(pages)[t // PAGE_SIZE] * PAGE_SIZE \
+            + t % PAGE_SIZE
+        state["page_table"] = jax.numpy.asarray(table)
+        state = engine.insert(prefix, state, slot, row=slot, dst_rows=dst)
+    _, streams = _raw_decode_loop(engine, params, state, prefix["logits"],
+                                  MAX_NEW)
+    assert streams == ref, f"raw paged API diverged from driver ({fmt})"
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_ring_and_paged_streams_identical(smoke_model, fmt):
+    cfg, params, prompts = smoke_model
+    _, ring = _serve_ref(cfg, params, _scfg("ring", fmt), prompts)
+    _, paged = _serve_ref(cfg, params, _scfg("paged", fmt), prompts)
+    assert ring == paged
+
+
+def test_paged_prefix_is_bucket_width_not_max_len(smoke_model):
+    """Acceptance: paged prefill never allocates the old intermediate
+    max_len ring cache — every prefix K/V leaf is bucket-wide."""
+    cfg, params, prompts = smoke_model
+    eng = ServingEngine(cfg, params, _scfg("paged", "posit8"))
+    engine = eng.engine
+    prefix, bucket = _bucketed_prefix(engine, params, prompts)
+    assert bucket < MAX_LEN
+    for blk in prefix["cache"]["blocks"]:
+        for name in ("k", "v", "k_scale", "v_scale"):
+            assert blk[name].shape[2] == bucket, (
+                f"{name} prefix rows widened to {blk[name].shape[2]} "
+                f"(bucket {bucket}, max_len {MAX_LEN})")
+
+
+def test_bucketed_prefill_bit_identical_to_exact(smoke_model):
+    cfg, params, prompts = smoke_model
+    engine = TransprecisionEngine(
+        cfg, ServingEngine(cfg, params,
+                           _scfg("ring", "posit8")).policy,
+        MAX_BATCH, MAX_LEN)
+    p = prompts[1]
+    n = len(p)
+    prefix, bucket = _bucketed_prefix(engine, params, [p] * MAX_BATCH)
+    exact = engine.prefill(params, np.asarray([p] * MAX_BATCH, np.int32))
+    np.testing.assert_array_equal(np.asarray(prefix["logits"]),
+                                  np.asarray(exact["logits"]))
+    for pb, eb in zip(prefix["cache"]["blocks"],
+                      exact["cache"]["blocks"]):
+        for name in ("k", "v", "k_scale", "v_scale"):
+            np.testing.assert_array_equal(
+                np.asarray(pb[name])[:, :, :n],
+                np.asarray(eb[name])[:, :, :n], err_msg=name)
+
+
+def test_rollback_ring_scatter_matches_brute_force(smoke_model):
+    """The O(B·t) scatter rollback equals a brute-force 'reset rows
+    [scrub_from, window_end) to init' reference on every scrubbed leaf."""
+    cfg, params, prompts = smoke_model
+    eng = ServingEngine(cfg, params, _scfg("ring", "posit8"))
+    engine = eng.engine
+    state = engine.init_decode_state()
+    prefix, _ = _bucketed_prefix(engine, params, prompts)
+    for slot in range(len(prompts)):
+        state = engine.insert(prefix, state, slot, row=slot)
+    state, _ = _raw_decode_loop(engine, params, state, prefix["logits"], 4)
+
+    t = 3
+    pos = np.asarray(state["pos"])                     # everyone advanced
+    window_end = pos.copy()
+    scrub_from = np.array([pos[0] - 2, pos[1], pos[2] - 3])  # slot1 no-op
+    new_pos = scrub_from.copy()
+    rolled = rollback_ring_cache(state, new_pos, window_end, scrub_from, t)
+
+    np.testing.assert_array_equal(np.asarray(rolled["pos"]), new_pos)
+    for bi, (old, new) in enumerate(zip(state["blocks"],
+                                        rolled["blocks"])):
+        for name in ("k", "v", "k_scale", "v_scale"):
+            want = np.asarray(old[name]).copy()        # (P, B, W, ...)
+            init = 1.0 if name.endswith("_scale") else 0
+            for s in range(MAX_BATCH):
+                want[:, s, scrub_from[s]:window_end[s]] = init
+            np.testing.assert_array_equal(np.asarray(new[name]), want,
+                                          err_msg=f"block{bi}.{name}")
+
+
+@pytest.mark.parametrize("layout", ["ring", "paged"])
+def test_cap_truncated_speculative_identical_to_baseline(smoke_model,
+                                                         layout):
+    """Dynamic chunk shrink: speculative slots decode all the way to
+    max_len - 1, so cap-truncated streams match baseline exactly."""
+    cfg, params, prompts = smoke_model
+    scfg = ServeConfig(max_batch=2, max_len=24, kv_format="posit8",
+                       kv_layout=layout,
+                       page_size=PAGE_SIZE if layout == "paged" else None)
+    _, ref = _serve_ref(cfg, params, scfg, prompts, max_new=64)
+    # cap-truncated: the slot frees at pos == max_len - 1, and the final
+    # emitted token never enters the cache, so prompt + stream == max_len
+    assert all(len(p) + len(s) == scfg.max_len
+               for p, s in zip(prompts, ref)), "cap never hit; bad shapes"
+    spec = SpeculativeEngine(cfg, params, scfg, gamma=4)
+    reqs = [Request(uid=i, prompt=np.asarray(p, np.int32), max_new=64)
+            for i, p in enumerate(prompts)]
+    spec.serve(reqs)
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+
+def test_page_overcommit_evicts_and_recovers(smoke_model):
+    """Pool-dry graceful degradation: with the worst-case reservation
+    waived, a dried pool evicts the newest sequence (requeued for
+    recompute-on-readmit) instead of raising, and every stream still
+    matches the amply-pooled run."""
+    cfg, params, prompts = smoke_model
+    full = ServeConfig(max_batch=2, max_len=MAX_LEN, kv_format="posit8",
+                       kv_layout="paged", page_size=8)
+    _, ref = _serve_ref(cfg, params, full, prompts, max_new=10)
+
+    # 4 usable pages: both prompts admit on current demand (1 + 2 pages)
+    # but their combined growth needs 5, so the pool must dry mid-decode
+    tight = dataclasses.replace(full, num_pages=5, page_overcommit=True)
+    eng = ServingEngine(cfg, params, tight)
+    reqs = [Request(uid=i, prompt=np.asarray(p, np.int32), max_new=10)
+            for i, p in enumerate(prompts)]
+    stats = eng.serve(reqs)
+    assert stats["evictions"] >= 1, "pool never dried; shrink num_pages"
+    assert all(r.done and r.error is None for r in reqs)
+    assert [list(r.out_tokens) for r in reqs] == ref
+
+    # without overcommit the same pool admits one sequence at a time
+    # (worst-case reservation) and never needs an eviction
+    strict = dataclasses.replace(tight, page_overcommit=False)
+    eng2 = ServingEngine(cfg, params, strict)
+    reqs2 = [Request(uid=i, prompt=np.asarray(p, np.int32), max_new=10)
+             for i, p in enumerate(prompts)]
+    stats2 = eng2.serve(reqs2)
+    assert stats2["evictions"] == 0
+    assert [list(r.out_tokens) for r in reqs2] == ref

@@ -1,0 +1,118 @@
+"""Async orchestrator tests: backpressure, admission timeouts,
+out-of-order completion, and streaming-callback identity with the
+synchronous ``engine.serve`` loop."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
+                                      StreamingRequest)
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (4, 11, 7, 5)]
+    return cfg, params, prompts
+
+
+def _engine(cfg, params, max_batch=2, **kw):
+    return ServingEngine(cfg, params,
+                         ServeConfig(max_batch=max_batch, max_len=MAX_LEN,
+                                     **kw))
+
+
+def test_streams_and_callbacks_match_engine_serve(smoke_model):
+    cfg, params, prompts = smoke_model
+    reqs = [Request(uid=i, prompt=np.asarray(p, np.int32), max_new=8)
+            for i, p in enumerate(prompts)]
+    _engine(cfg, params).serve(reqs)
+    ref = [list(r.out_tokens) for r in reqs]
+
+    got = {}
+    def cb(sreq, ids, piece):
+        got.setdefault(id(sreq), []).extend(ids)
+        assert threading.current_thread().name == "orch-detok"
+    with Orchestrator(_engine(cfg, params)) as orch:
+        sreqs = [StreamingRequest(p, max_new=8, on_token=cb)
+                 for p in prompts]
+        for s in sreqs:
+            assert orch.submit(s, timeout=60.0)
+        for s in sreqs:
+            assert s.wait(120.0)
+    assert [s.out_tokens for s in sreqs] == ref
+    assert [got[id(s)] for s in sreqs] == ref        # callback stream too
+    for s in sreqs:
+        assert s.error is None and s.ttft_s is not None
+        assert len(s.token_t) == len(s.out_tokens)
+        assert s.out_text                       # default byte detokenizer
+    assert orch.stats["finished"] == len(sreqs)
+
+
+def test_admission_timeout_backpressure(smoke_model):
+    cfg, params, prompts = smoke_model
+    ocfg = OrchestratorConfig(max_queue=1)
+    with Orchestrator(_engine(cfg, params), ocfg) as orch:
+        a = StreamingRequest(prompts[0], max_new=32)
+        assert orch.submit(a, timeout=10.0)
+        # the single in-flight permit is held until `a` finishes, so a
+        # second submit must time out instead of growing the queue
+        b = StreamingRequest(prompts[1], max_new=4)
+        assert not orch.submit(b, timeout=0.05)
+        assert orch.stats["admission_timeouts"] == 1
+        assert a.wait(120.0)
+        assert orch.submit(b, timeout=60.0)      # permit released
+        assert b.wait(120.0)
+    assert len(a.out_tokens) == 32 and len(b.out_tokens) == 4
+
+
+def test_out_of_order_completion(smoke_model):
+    cfg, params, prompts = smoke_model
+    with Orchestrator(_engine(cfg, params)) as orch:
+        slow = StreamingRequest(prompts[0], max_new=48)
+        fast = StreamingRequest(prompts[1], max_new=2)
+        assert orch.submit(slow, timeout=30.0)
+        assert orch.submit(fast, timeout=30.0)
+        assert fast.wait(120.0)
+        # submitted first, but still decoding when `fast` finished
+        assert not slow.done
+        assert slow.wait(120.0)
+    assert len(fast.out_tokens) == 2 and len(slow.out_tokens) == 48
+
+
+def test_never_admissible_request_is_rejected(smoke_model):
+    cfg, params, _ = smoke_model
+    with Orchestrator(_engine(cfg, params)) as orch:
+        bad = StreamingRequest(list(range(MAX_LEN + 1)), max_new=4)
+        assert orch.submit(bad, timeout=10.0)
+        assert bad.wait(60.0)
+    assert bad.error is not None and "max_len" in bad.error
+    assert bad.out_tokens == []
+    assert orch.stats["rejected"] == 1
+
+
+def test_submit_after_close_raises(smoke_model):
+    cfg, params, prompts = smoke_model
+    orch = Orchestrator(_engine(cfg, params))
+    orch.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        orch.submit(StreamingRequest(prompts[0]))
+
+
+def test_text_prompt_roundtrip(smoke_model):
+    cfg, params, _ = smoke_model
+    with Orchestrator(_engine(cfg, params)) as orch:
+        s = StreamingRequest("hello edge", max_new=4)
+        assert orch.submit(s, timeout=30.0)
+        assert s.wait(120.0)
+    assert len(s.out_tokens) == 4
+    assert len(s.out_text) > 0
