@@ -18,8 +18,16 @@ dominates and p99 TTFT grows with the backlog — the sweep makes that
 knee visible.  CPU-reference numbers on this container; the shape of the
 curve, not the absolute latencies, is the artifact.
 
-Writes ``benchmarks/results/BENCH_serving.json`` (plus run.py's generic
-``serving.json``).
+Rate accounting: the measurement window runs from the FIRST submit to
+the LAST finish (both ``perf_counter`` stamps recorded by the
+orchestrator), so achieved_rps can never exceed the offered rate beyond
+the N/(N-1) edge correction — asserted per load point.  Each load point
+also carries a per-stage wall-clock breakdown (dispatch vs device-sync
+per engine stage, orchestrator overhead) from the span tracer
+(:mod:`repro.obs`); set ``REPRO_TRACE=1`` to additionally write the full
+Chrome trace to ``results/BENCH_serving.trace.json``.
+
+Writes ``benchmarks/results/BENCH_serving.json``.
 
   PYTHONPATH=src python -m benchmarks.run serving
 """
@@ -34,6 +42,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
+from repro.obs import Tracer, stage_breakdown
 from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
                                       StreamingRequest)
@@ -57,29 +66,51 @@ def _pct(xs, q):
 def _run_load(eng, prompts, rate_rps, rng):
     """Submit N_REQ prompts with Poisson gaps at rate_rps; return metrics."""
     ev0 = eng.stats.get("evictions", 0)
+    since = eng.tracer.self_times()
     orch = Orchestrator(eng, OrchestratorConfig(max_queue=4 * N_REQ,
                                                 detokenize=False))
     sreqs = [StreamingRequest(p, max_new=MAX_NEW) for p in prompts]
     gaps = rng.exponential(1.0 / rate_rps, size=len(sreqs))
-    t0 = time.time()
     for sreq, gap in zip(sreqs, gaps):
         assert orch.submit(sreq, timeout=120.0)
         time.sleep(float(gap))
     for sreq in sreqs:
         assert sreq.wait(300.0), "stream did not finish"
     orch.close()
-    wall = time.time() - t0
+    # measurement window: first submit -> last finish (perf_counter stamps
+    # recorded by the orchestrator).  The old form started the clock
+    # before the first submit and stopped it after close(), which let
+    # achieved_rps exceed the offered rate at low load (the window was
+    # dominated by the submit gaps, not service time).
+    first_submit = min(s.submit_t for s in sreqs)
+    last_submit = max(s.submit_t for s in sreqs)
+    wall = max(s.finish_t for s in sreqs) - first_submit
+    achieved_rps = len(sreqs) / wall
+    # sanity: over this window achieved <= offered up to the edge
+    # correction — N requests span only N-1 submit gaps
+    measured_offered = None
+    if last_submit > first_submit:
+        measured_offered = (len(sreqs) - 1) / (last_submit - first_submit)
+        bound = measured_offered * len(sreqs) / (len(sreqs) - 1)
+        assert achieved_rps <= bound * 1.001, \
+            f"achieved {achieved_rps:.3f} rps exceeds offered bound " \
+            f"{bound:.3f} rps — measurement window is wrong"
     ttft = [s.ttft_s for s in sreqs]
     itl = [g for s in sreqs for g in s.itl_s()]
     tokens = sum(len(s.out_tokens) for s in sreqs)
+    bd = stage_breakdown(eng.tracer, wall, since=since)
+    assert bd["attributed_frac"] >= 0.9, \
+        f"stage breakdown covers only {bd['attributed_frac']:.0%} of wall"
     return {"offered_rps": rate_rps,
-            "achieved_rps": len(sreqs) / wall,
+            "measured_offered_rps": measured_offered,
+            "achieved_rps": achieved_rps,
             "tok_per_s": tokens / wall,
             "ttft_ms": {"p50": _pct(ttft, 50) * 1e3,
                         "p99": _pct(ttft, 99) * 1e3},
             "itl_ms": {"p50": _pct(itl, 50) * 1e3,
                        "p99": _pct(itl, 99) * 1e3},
-            "evictions": eng.stats.get("evictions", 0) - ev0}
+            "evictions": eng.stats.get("evictions", 0) - ev0,
+            "stage_breakdown": bd}
 
 
 def run():
@@ -87,7 +118,9 @@ def run():
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
                        kv_format=KV_FORMAT)
-    eng = ServingEngine(cfg, params, scfg)
+    # big ring so the whole sweep survives for the optional trace export
+    eng = ServingEngine(cfg, params, scfg,
+                        tracer=Tracer(capacity=1 << 18, enabled=True))
     prompts = _prompts(cfg)
 
     # calibrate: back-to-back batch (compiles all prefill buckets + the
@@ -104,6 +137,11 @@ def run():
         m = _run_load(eng, prompts, rate_rps=f * service_rps, rng=rng)
         m["load_factor"] = f
         out["loads"].append(m)
+    if os.environ.get("REPRO_TRACE"):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_serving.trace.json")
+        eng.tracer.write_chrome_trace(path)
+        out["trace_file"] = os.path.basename(path)
     return out
 
 
@@ -114,12 +152,14 @@ def main(verbose=False):
               f"({out['shape']['requests']} reqs, "
               f"max_new={out['shape']['max_new']})")
         for m in out["loads"]:
+            bd = m["stage_breakdown"]
             print(f"  load {m['load_factor']:.1f}x: offered "
                   f"{m['offered_rps']:.2f} rps, achieved "
                   f"{m['achieved_rps']:.2f} rps | TTFT p50/p99 "
                   f"{m['ttft_ms']['p50']:.0f}/{m['ttft_ms']['p99']:.0f} ms"
                   f" | ITL p50/p99 {m['itl_ms']['p50']:.0f}/"
-                  f"{m['itl_ms']['p99']:.0f} ms")
+                  f"{m['itl_ms']['p99']:.0f} ms | "
+                  f"{bd['attributed_frac']:.0%} wall attributed")
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=1)

@@ -19,8 +19,16 @@ and both KV layouts, reporting per cell:
 Acceptance target (ISSUE 3): identical streams and < 1.0 target
 steps/token at gamma >= 2.
 
+Every cell (and each layout's baseline) carries a ``stage_breakdown``
+from the span tracer (:mod:`repro.obs`): per-stage dispatch vs
+device-sync seconds (draft stages prefixed ``draft.``), host overhead,
+and the fraction of wall attributed — the data behind ROADMAP direction
+1's "why is speculative wall-clock slower" question.  Set
+``REPRO_TRACE=1`` to also write the sweep's Chrome trace to
+``results/BENCH_speculative.trace.json``.
+
 Writes the machine-readable artifact ``benchmarks/results/
-BENCH_speculative.json`` (plus run.py's generic ``speculative.json``).
+BENCH_speculative.json``.
 
   PYTHONPATH=src python -m benchmarks.run speculative
 """
@@ -28,13 +36,14 @@ from __future__ import annotations
 
 import json
 import os
-import time
+from time import perf_counter
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
+from repro.obs import Tracer, stage_breakdown
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 from repro.serve.speculative import SpeculativeEngine
 
@@ -53,33 +62,44 @@ def _requests(cfg, seed=0):
             for i in range(N_REQ)]
 
 
-def _serve(engine_f, cfg):
+def _serve(engine_f, cfg, tracer):
     eng = engine_f()
     reqs = _requests(cfg)
-    t0 = time.time()
+    since = tracer.self_times()
+    t0 = perf_counter()
     stats = eng.serve(reqs)
-    stats["wall_s"] = time.time() - t0
-    stats["tok_per_s"] = stats["tokens"] / max(stats["wall_s"], 1e-9)
+    wall = perf_counter() - t0
+    stats["wall_s"] = wall
+    stats["tok_per_s"] = stats["tokens"] / max(wall, 1e-9)
+    stats["stage_breakdown"] = stage_breakdown(tracer, wall, since=since)
     return [r.out_tokens for r in reqs], stats
 
 
 def run():
     cfg = get_config("paper-edge", smoke=True)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    # one tracer across the whole sweep: per-cell deltas via since=
+    # snapshots, one Chrome trace covering every cell at the end
+    tracer = Tracer(capacity=1 << 18, enabled=True)
     out = {"shape": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
                      "page_size": PAGE_SIZE, "max_new": MAX_NEW,
                      "requests": N_REQ, "kv_format": KV_FORMAT},
-           "cells": {}}
+           "cells": {}, "baselines": {}}
     for layout in LAYOUTS:
         scfg = ServeConfig(max_batch=MAX_BATCH, max_len=MAX_LEN,
                            kv_format=KV_FORMAT, kv_layout=layout,
                            page_size=PAGE_SIZE)
         base_out, base_stats = _serve(
-            lambda: ServingEngine(cfg, params, scfg), cfg)
+            lambda: ServingEngine(cfg, params, scfg, tracer=tracer), cfg,
+            tracer)
+        out["baselines"][layout] = {
+            "tok_per_s": round(base_stats["tok_per_s"], 1),
+            "stage_breakdown": base_stats["stage_breakdown"]}
         for gamma in GAMMAS:
             spec_out, s = _serve(
-                lambda: SpeculativeEngine(cfg, params, scfg, gamma=gamma),
-                cfg)
+                lambda: SpeculativeEngine(cfg, params, scfg, gamma=gamma,
+                                          tracer=tracer),
+                cfg, tracer)
             decode_tokens = s["tokens"] - s["prefills"]
             cell = {
                 "identical": spec_out == base_out,
@@ -92,12 +112,18 @@ def run():
                 "spec_rounds": s["spec_rounds"],
                 "tok_per_s": {"baseline": round(base_stats["tok_per_s"], 1),
                               "speculative": round(s["tok_per_s"], 1)},
+                "stage_breakdown": s["stage_breakdown"],
             }
             out["cells"][f"{layout}_gamma{gamma}"] = cell
     cells = out["cells"].values()
     out["all_identical"] = all(c["identical"] for c in cells)
     out["best_target_steps_per_token"] = min(
         c["target_steps_per_token"] for c in cells)
+    if os.environ.get("REPRO_TRACE"):
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, "BENCH_speculative.trace.json")
+        tracer.write_chrome_trace(path)
+        out["trace_file"] = os.path.basename(path)
     return out
 
 

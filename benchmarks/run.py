@@ -56,7 +56,9 @@ def main():
         t0 = time.time()
         out = _entry(name).main(verbose=True)
         dt_us = (time.time() - t0) * 1e6
-        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        # canonical per-bench artifact; the modules write the same file
+        # themselves, so this never forks a stale "{name}.json" duplicate
+        path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
         try:
             json.dump(out, open(path, "w"), indent=1, default=str)
         except TypeError:

@@ -9,9 +9,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ARGS=()
+SMOKE=0
 if [[ "${1:-}" == "--smoke" ]]; then
   shift
+  SMOKE=1
   ARGS+=(--ignore=tests/test_system.py)
 fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "${ARGS[@]}" "$@"
+
+if [[ "$SMOKE" == 1 ]]; then
+  # legacy stats dicts are views over the metrics registry; pin the
+  # equivalence so the two surfaces can't drift apart
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/stats_consistency.py
+fi

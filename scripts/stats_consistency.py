@@ -1,0 +1,64 @@
+"""Assert legacy ``stats`` keys stay consistent with the metrics registry.
+
+The engines' ``stats`` dicts are now :class:`repro.obs.StatsView` facades
+over one shared :class:`repro.obs.MetricsRegistry`; this script serves a
+couple of smoke requests through the threaded orchestrator and checks
+every legacy key — engine and orchestrator — against the registry
+snapshot value it is supposed to be a view of.  Run by
+``scripts/check.sh --smoke`` so a drift between the two surfaces fails
+CI, not a dashboard.
+
+  PYTHONPATH=src python scripts/stats_consistency.py
+"""
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.obs import Tracer
+from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
+                                      StreamingRequest)
+
+
+def main() -> int:
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=2, max_len=64, kv_format="posit8")
+    eng = ServingEngine(cfg, params, scfg, tracer=Tracer(enabled=True))
+    rng = np.random.default_rng(0)
+    sreqs = [StreamingRequest(rng.integers(0, cfg.vocab, 6).tolist(),
+                              max_new=4) for _ in range(3)]
+    with Orchestrator(eng, OrchestratorConfig(detokenize=False)) as orch:
+        for s in sreqs:
+            assert orch.submit(s, timeout=60.0)
+        for s in sreqs:
+            assert s.wait(120.0), "stream did not finish"
+        snap = eng.metrics.snapshot()
+        flat = {**snap["counters"], **snap["gauges"]}
+        bad = []
+        for label, view in (("engine", eng.stats), ("orch", orch.stats)):
+            for key in view:
+                name = view.metric_name(key)
+                if name not in flat:
+                    bad.append(f"{label}.stats[{key!r}] -> {name} "
+                               f"missing from registry snapshot")
+                elif flat[name] != view[key]:
+                    bad.append(f"{label}.stats[{key!r}] = {view[key]} but "
+                               f"registry {name} = {flat[name]}")
+    if bad:
+        print("stats/registry drift:", *bad, sep="\n  ")
+        return 1
+    n_tok = sum(len(s.out_tokens) for s in sreqs)
+    assert n_tok > 0 and flat["engine.tokens"] >= n_tok
+    assert flat["orch.submitted"] == len(sreqs)
+    assert flat["orch.finished"] == len(sreqs)
+    print(f"stats consistency OK: {len(dict(eng.stats))} engine + "
+          f"{len(dict(orch.stats))} orchestrator keys match the registry")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,10 +16,20 @@ host-side detokenize/streaming overlapped with device compute; it reports
 TTFT and inter-token latency percentiles.  ``--overcommit`` (paged
 layout) admits on current page demand instead of the worst case and
 evicts/requeues the newest sequence if the pool runs dry.
+
+Observability (``repro.obs``): ``--trace-out run.trace.json`` enables
+the span tracer and writes a Chrome-trace file (open in
+``chrome://tracing`` or https://ui.perfetto.dev) covering engine stage
+dispatch/device-sync, orchestrator loop segments and the detokenizer
+thread; a per-stage wall-clock breakdown table is printed at exit.
+``--metrics-json metrics.json`` dumps the full metrics-registry
+snapshot (counters, gauges, latency histograms with p50/p95/p99).
 """
 from __future__ import annotations
 
 import argparse
+import json
+from time import perf_counter
 
 import jax
 import numpy as np
@@ -27,6 +37,7 @@ import numpy as np
 from ..configs import get_config
 from ..core.transprecision import PRESETS
 from ..models import lm
+from ..obs import format_breakdown, stage_breakdown
 from ..serve.engine import Request, ServeConfig, ServingEngine
 
 
@@ -76,6 +87,13 @@ def main():
     ap.add_argument("--draft-kv-format", default="posit8",
                     choices=["f32", "bf16", "posit16", "posit8", "posit4"],
                     help="speculative: draft-pass KV storage format")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable span tracing and write a Chrome-trace "
+                         "JSON (chrome://tracing / Perfetto) on exit; "
+                         "also prints a per-stage wall-clock breakdown")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot (counters, "
+                         "gauges, latency histograms) on exit")
     args = ap.parse_args()
 
     if args.speculative and args.temperature > 0:
@@ -95,6 +113,8 @@ def main():
                                    draft_kv_format=args.draft_kv_format)
     else:
         engine = ServingEngine(cfg, params, scfg, policy=args.policy)
+    if args.trace_out:
+        engine.tracer.enable()
     rng = np.random.default_rng(0)
     if args.async_:
         return _serve_async(engine, cfg, rng, args)
@@ -102,7 +122,9 @@ def main():
                     prompt=rng.integers(0, cfg.vocab, rng.integers(4, 17)),
                     max_new=args.max_new)
             for i in range(args.requests)]
+    t0 = perf_counter()
     stats = engine.serve(reqs)
+    wall = perf_counter() - t0
     for r in reqs[:4]:
         print(f"req {r.uid}: {len(r.out_tokens)} tokens ->",
               r.out_tokens[:10], "...")
@@ -114,6 +136,19 @@ def main():
               f"target steps/token={spt:.2f}")
     print("stats:", {k: (round(v, 2) if isinstance(v, float) else v)
                      for k, v in stats.items()})
+    _write_obs(engine, wall, args)
+
+
+def _write_obs(engine, wall_s, args):
+    """Dump trace / metrics files and print the stage breakdown."""
+    if args.trace_out:
+        print(format_breakdown(stage_breakdown(engine.tracer, wall_s)))
+        engine.tracer.write_chrome_trace(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(engine.metrics.snapshot(), f, indent=1)
+        print(f"metrics snapshot -> {args.metrics_json}")
 
 
 def _serve_async(engine, cfg, rng, args):
@@ -127,6 +162,7 @@ def _serve_async(engine, cfg, rng, args):
     sreqs = [StreamingRequest(
         rng.integers(0, cfg.vocab, rng.integers(4, 17)).tolist(),
         max_new=args.max_new) for _ in range(args.requests)]
+    t0 = perf_counter()
     with Orchestrator(engine, ocfg) as orch:
         for s in sreqs:
             if not orch.submit(s):
@@ -136,6 +172,7 @@ def _serve_async(engine, cfg, rng, args):
                 time.sleep(float(rng.exponential(1.0 / args.rate)))
         for s in sreqs:
             s.wait()
+    wall = perf_counter() - t0
     for s in sreqs[:4]:
         print(f"stream: {len(s.out_tokens)} tokens ->",
               s.out_tokens[:10], "...")
@@ -146,9 +183,10 @@ def _serve_async(engine, cfg, rng, args):
         print(f"TTFT p50/p99: {pct(ttft, 50):.1f}/{pct(ttft, 99):.1f} ms")
     if itl:
         print(f"ITL  p50/p99: {pct(itl, 50):.1f}/{pct(itl, 99):.1f} ms")
-    print("orchestrator:", orch.stats, "| engine:",
+    print("orchestrator:", dict(orch.stats), "| engine:",
           {k: (round(v, 2) if isinstance(v, float) else v)
            for k, v in engine.stats.items()})
+    _write_obs(engine, wall, args)
 
 
 if __name__ == "__main__":

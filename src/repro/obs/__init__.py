@@ -1,0 +1,17 @@
+"""Serving observability: span tracing, metrics, time attribution.
+
+* :mod:`repro.obs.tracer` — low-overhead thread-aware span tracer with
+  Chrome-trace/Perfetto export (``Tracer``);
+* :mod:`repro.obs.metrics` — typed metrics registry (counters, gauges,
+  log-bucketed latency histograms) + the ``StatsView`` legacy facade;
+* :mod:`repro.obs.report` — per-stage wall-clock attribution
+  (``stage_breakdown``) separating host-dispatch from device time.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      StatsView)
+from .report import format_breakdown, stage_breakdown
+from .tracer import Span, Tracer
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "StatsView", "Span", "Tracer", "format_breakdown",
+           "stage_breakdown"]

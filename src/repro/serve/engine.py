@@ -55,6 +55,7 @@ import numpy as np
 
 from ..core.transprecision import BF16, TCPolicy, get_policy
 from ..models import lm
+from ..obs import MetricsRegistry, StatsView, Tracer
 from .engine_api import TransprecisionEngine
 from .paged import PageAllocator, SlotPages, pages_for
 
@@ -110,10 +111,17 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
-                 policy: TCPolicy = BF16, *, attn_impl=None):
+                 policy: TCPolicy = BF16, *, attn_impl=None,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.scfg = scfg
         self.policy = get_policy(policy)
+        # observability: one registry per engine (the orchestrator and
+        # the speculative draft engine share it); tracing defaults OFF —
+        # span call sites stay in place at ~no cost (tests/test_obs.py
+        # bounds the disabled overhead)
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.metrics = MetricsRegistry()
         overrides = {}
         if scfg.kv_format is not None:
             overrides["kv_format"] = scfg.kv_format
@@ -134,7 +142,9 @@ class ServingEngine:
             self._pmax = pages_for(L, ps)
             self.num_pages = (scfg.num_pages if scfg.num_pages is not None
                               else 1 + b * self._pmax)
-            self.allocator = PageAllocator(self.num_pages, ps)
+            self.allocator = PageAllocator(self.num_pages, ps,
+                                           metrics=self.metrics,
+                                           tracer=self.tracer)
             self.slot_pages = [SlotPages(ps) for _ in range(b)]
             # worst-case page reservations (admission control): pages a
             # slot may still grow into are committed but not yet allocated
@@ -147,7 +157,7 @@ class ServingEngine:
         self.engine = TransprecisionEngine(
             cfg, self.policy, b, L,
             num_pages=self.num_pages if self.paged else None,
-            attn_impl=attn_impl)
+            attn_impl=attn_impl, tracer=self.tracer, metrics=self.metrics)
         self.cache = self.engine.init_decode_state()
         if self.paged:
             self.cache["page_table"] = jnp.asarray(self._table)
@@ -163,9 +173,13 @@ class ServingEngine:
         # per-token callbacks hang off this)
         self.on_emit: Optional[Callable[[Request, List[int]], None]] = None
         self._rng = np.random.default_rng(scfg.seed)
-        self.stats = {"prefills": 0, "decode_steps": 0, "tokens": 0,
-                      "rejected": 0, "peak_live_pages": 0, "evictions": 0,
-                      "kv_cache_bytes": self.kv_cache_bytes()}
+        # legacy ``stats`` surface, backed by the shared metrics registry
+        # (every key is a registry counter/gauge named "engine.<key>")
+        self.stats = StatsView(self.metrics, prefix="engine.")
+        self.stats.bind_counters("prefills", "decode_steps", "tokens",
+                                 "rejected", "evictions")
+        self.stats.bind_gauges("peak_live_pages", "kv_cache_bytes")
+        self.stats["kv_cache_bytes"] = self.kv_cache_bytes()
 
     # ---- cache footprint ----
     def _kv_bytes(self, pool_frac: float = 1.0, cache=None) -> int:
@@ -479,7 +493,8 @@ class ServingEngine:
         self.cache, logits = self.engine.generate(self.params, self.cache)
         temps = np.asarray([0.0 if r is None else self._req_temp(r)
                             for r in self.slot_req], np.float32)
-        toks = self._sample(np.asarray(logits), temps)
+        with self.tracer.span("host.sample"):
+            toks = self._sample(np.asarray(logits), temps)
         self.stats["decode_steps"] += 1
         for i in active:
             req = self.slot_req[i]
@@ -535,9 +550,11 @@ class ServingEngine:
 
     def serve(self, requests: List[Request], max_ticks: int = 10_000
               ) -> Dict[str, Any]:
-        """Run to completion with continuous batching."""
+        """Run to completion with continuous batching.  Durations come
+        from ``time.perf_counter()`` (monotonic, same clock as the
+        tracer/orchestrator stamps) — never ``time.time()``."""
         queue = list(requests)
-        t0 = time.time()
+        t0 = time.perf_counter()
         ticks = 0
         while (queue or self._evicted
                or any(r is not None for r in self.slot_req)) \
@@ -545,10 +562,12 @@ class ServingEngine:
             if self._evicted:   # evicted sequences readmit first (oldest)
                 queue[0:0] = self._evicted
                 self._evicted.clear()
-            self._admit(queue)
-            self.step()
+            with self.tracer.span("serve.admit"):
+                self._admit(queue)
+            with self.tracer.span("serve.step"):
+                self.step()
             ticks += 1
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         # live bytes at drain are ~0 by construction (every finished
         # request returns its pages); the peak is the meaningful figure
         return {"wall_s": dt, **self.stats,

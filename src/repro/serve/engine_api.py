@@ -39,10 +39,21 @@ Design points:
 Families outside the bucketed gate (sliding-window, recurrent/SSM, MoE,
 audio/vlm) keep the legacy exact-length full-width prefill + whole-leaf
 insert path, preserving their semantics unchanged.
+
+Observability: constructed with a ``tracer``/``metrics`` pair
+(:mod:`repro.obs`), every stage call is wrapped in *paired* stamps — a
+``<stage>.dispatch`` span until the (async) stage call returns to
+Python, then a ``<stage>.device`` span around ``jax.block_until_ready``
+— so Python/jit-dispatch overhead is attributed separately from device
+compute, and a ``jax.profiler.TraceAnnotation`` so host spans line up
+with XLA traces.  With tracing disabled nothing is synchronized and the
+per-call overhead is a single attribute check (the < 2 % decode-loop
+bound in ``tests/test_obs.py``).
 """
 from __future__ import annotations
 
 import dataclasses
+from time import perf_counter
 from typing import Any, Dict, Optional
 
 import jax
@@ -52,6 +63,7 @@ import numpy as np
 from ..core.transprecision import TCPolicy, get_policy
 from ..models.serve_model import (decode_step, init_cache, prefill,
                                   verify_step)
+from ..obs import MetricsRegistry, Tracer
 
 _POOL_LEAF_NAMES = ("k", "v", "k_scale", "v_scale")
 _SCRUB_LEAVES = ("k", "v", "k_scale", "v_scale")
@@ -185,9 +197,18 @@ class TransprecisionEngine:
 
     def __init__(self, cfg, policy: TCPolicy, max_batch: int, max_len: int,
                  *, num_pages: Optional[int] = None, attn_impl=None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 stage_prefix: str = ""):
         self.cfg = cfg
         self.policy = get_policy(policy)
+        # observability: spans + per-stage latency histograms while the
+        # tracer is enabled (the speculative draft engine shares its
+        # driver's tracer/registry under a "draft." stage prefix)
+        self.tracer = tracer
+        self.metrics = metrics
+        self.stage_prefix = stage_prefix
         self.max_batch, self.max_len = max_batch, max_len
         self.paged = getattr(self.policy, "kv_layout", "ring") == "paged"
         self.num_pages = num_pages
@@ -220,6 +241,33 @@ class TransprecisionEngine:
         self._rb_paged = jax.jit(
             rollback_paged_cache,
             donate_argnums=(0,) if self._donate else ())
+
+    # ---- observability ----
+    def _staged(self, stage: str, fn, *args):
+        """Run one engine stage with paired host-dispatch / device-
+        complete stamps.  The dispatch span covers the Python call (jit
+        dispatch, and compilation on a cache miss); the device span
+        covers the ``block_until_ready`` wait for the stage's outputs.
+        With no enabled tracer this is a plain call — no sync, no
+        stamps — so tracing-off serving keeps XLA's async dispatch."""
+        tr = self.tracer
+        if tr is None or not tr.enabled:
+            return fn(*args)
+        name = self.stage_prefix + stage
+        t0 = perf_counter()
+        with jax.profiler.TraceAnnotation(name):
+            with tr.span(name + ".dispatch", cat="engine"):
+                out = fn(*args)
+        t1 = perf_counter()
+        with tr.span(name + ".device", cat="engine"):
+            jax.block_until_ready(out)
+        t2 = perf_counter()
+        if self.metrics is not None:
+            self.metrics.histogram(f"stage.{name}.dispatch_s").observe(
+                t1 - t0)
+            self.metrics.histogram(f"stage.{name}.device_s").observe(
+                t2 - t1)
+        return out
 
     # ---- stage: decode-state construction ----
     def init_decode_state(self) -> Dict[str, Any]:
@@ -278,8 +326,9 @@ class TransprecisionEngine:
             fn = jax.jit(impl if lengths is not None else impl_full)
             self._prefill_jits[key] = fn
         if lengths is not None:
-            return fn(params, tokens, jnp.asarray(lengths, jnp.int32))
-        return fn(params, tokens)
+            return self._staged("prefill", fn, params, tokens,
+                                jnp.asarray(lengths, jnp.int32))
+        return self._staged("prefill", fn, params, tokens)
 
     # ---- stage: insert ----
     def insert(self, prefix: Prefix, state, slot, row=0, dst_rows=None):
@@ -298,10 +347,11 @@ class TransprecisionEngine:
             self._insert_jits["fn"] = fn
         dst = (None if dst_rows is None
                else jnp.asarray(dst_rows, jnp.int32))
-        return fn(state, prefix["cache"],
-                  jnp.asarray(prefix["length"], jnp.int32),
-                  jnp.asarray(slot, jnp.int32), jnp.asarray(row, jnp.int32),
-                  dst is None, dst)
+        return self._staged(
+            "insert", fn, state, prefix["cache"],
+            jnp.asarray(prefix["length"], jnp.int32),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(row, jnp.int32),
+            dst is None, dst)
 
     def _insert_impl(self, state, pcache, length, slot, row, ring, dst_rows):
         def merge_block(dstb, srcb, stacked):
@@ -359,7 +409,7 @@ class TransprecisionEngine:
         ``tok`` (greedy argmax — drivers overwrite sampled rows).
         Returns ``(new_state, logits (B, vocab_pad))``.  Donates
         ``state``."""
-        return self._generate_jit(params, state)
+        return self._staged("generate", self._generate_jit, params, state)
 
     # ---- stage: verify (speculative rounds) ----
     def verify(self, params, state, chunk):
@@ -377,7 +427,7 @@ class TransprecisionEngine:
                 return nc, logits
             fn = jax.jit(impl, donate_argnums=(1,) if self._donate else ())
             self._verify_jits[t] = fn
-        return fn(params, state, chunk)
+        return self._staged("verify", fn, params, state, chunk)
 
     # ---- stage: rollback ----
     def rollback_ring(self, state, new_pos, window_end, scrub_from, t: int):
@@ -387,11 +437,13 @@ class TransprecisionEngine:
             fn = jax.jit(lambda c, n, e, f: rollback_ring_cache(c, n, e, f, t),
                          donate_argnums=(0,) if self._donate else ())
             self._rb_ring_jits[t] = fn
-        return fn(state, np.asarray(new_pos, np.int32),
-                  np.asarray(window_end, np.int32),
-                  np.asarray(scrub_from, np.int32))
+        return self._staged("rollback", fn, state,
+                            np.asarray(new_pos, np.int32),
+                            np.asarray(window_end, np.int32),
+                            np.asarray(scrub_from, np.int32))
 
     def rollback_paged(self, state, new_pos, scrub_rows):
         """Jitted :func:`rollback_paged_cache`."""
-        return self._rb_paged(state, np.asarray(new_pos, np.int32),
-                              jnp.asarray(scrub_rows, jnp.int32))
+        return self._staged("rollback", self._rb_paged, state,
+                            np.asarray(new_pos, np.int32),
+                            jnp.asarray(scrub_rows, jnp.int32))

@@ -22,9 +22,18 @@ background threads:
 Tokenisation is pluggable (``tokenize``/``detokenize`` callables); the
 default is a byte-level codec clipped to the model vocab, which is enough
 for the synthetic-data models this repo trains.  Timing is recorded
-host-side per emission (`submit`/first-token/finish monotonic stamps), so
-the serving benchmark can derive TTFT and inter-token latency percentiles
-without touching the engine.
+host-side per emission (`submit`/first-token/finish ``perf_counter``
+stamps — monotonic and comparable across threads), so the serving
+benchmark can derive TTFT and inter-token latency percentiles without
+touching the engine.
+
+Telemetry rides the engine's :class:`repro.obs.MetricsRegistry` under the
+``orch.`` prefix (``orch.submitted`` / ``finished`` / ``rejected`` /
+``admission_timeouts`` counters, ``orch.queue_depth`` gauge) and the
+engine's tracer: scheduler-loop segments get host spans (``orch.pull``,
+``orch.admit``, ``orch.step``, ``orch.retire``, ``orch.idle``) and the
+detokenizer thread gets ``cat="detok"`` spans, which the stage-breakdown
+report counts as concurrent rather than wall-clock.
 
 Threading contract: the engine is only ever touched from the scheduler
 thread; ``submit``/``wait`` are safe from any thread.  Callbacks run on
@@ -42,6 +51,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from ..obs import StatsView
 from .engine import Request, ServingEngine
 
 __all__ = ["OrchestratorConfig", "StreamingRequest", "Orchestrator"]
@@ -155,8 +165,12 @@ class Orchestrator:
         self._closed = False
         self._uid = 0
         self._stop = threading.Event()
-        self.stats = {"submitted": 0, "finished": 0, "rejected": 0,
-                      "admission_timeouts": 0}
+        self.tracer = engine.tracer
+        self.metrics = engine.metrics
+        self.stats = StatsView(self.metrics, prefix="orch.")
+        self.stats.bind_counters("submitted", "finished", "rejected",
+                                 "admission_timeouts")
+        self._queue_depth = self.metrics.gauge("orch.queue_depth")
 
         engine.on_emit = self._on_emit       # runs on the scheduler thread
         self._sched = threading.Thread(target=self._scheduler_loop,
@@ -181,9 +195,10 @@ class Orchestrator:
                 None if timeout == float("inf") or not blocking else timeout):
             self.stats["admission_timeouts"] += 1
             return False
-        sreq.submit_t = time.monotonic()
+        sreq.submit_t = time.perf_counter()
         self.stats["submitted"] += 1
         self._submitted.put(sreq)
+        self._queue_depth.set(self._submitted.qsize())
         return True
 
     # ---- scheduler thread ----
@@ -191,68 +206,77 @@ class Orchestrator:
         sreq = self._by_req.get(id(req))
         if sreq is None:
             return
-        now = time.monotonic()
+        now = time.perf_counter()
         sreq.token_t.extend([now] * len(toks))
         self._stream_q.put(("toks", sreq, list(toks)))
 
     def _finish(self, sreq: StreamingRequest, error: Optional[str] = None):
         sreq.error = error
-        sreq.finish_t = time.monotonic()
+        sreq.finish_t = time.perf_counter()
         self.stats["rejected" if error else "finished"] += 1
         self._stream_q.put(("done", sreq))
         self._slots.release()
 
     def _scheduler_loop(self) -> None:
-        eng, ocfg = self.engine, self.ocfg
+        eng, ocfg, tracer = self.engine, self.ocfg, self.tracer
         pending: deque = deque()
         while True:
             # pull new submissions; filter out the never-admissible
             fresh = False
-            while True:
-                try:
-                    sreq = self._submitted.get_nowait()
-                except queue.Empty:
-                    break
-                sreq._req = self._to_engine_request(sreq)
-                reject = eng._reject_reason(sreq._req)
-                if reject is not None:
-                    self._finish(sreq, error=reject)
-                    continue
-                self._by_req[id(sreq._req)] = sreq
-                pending.append(sreq)
-                fresh = True
-            # pool-dry evictions resume at the head of the line
-            if eng._evicted:
-                evicted, eng._evicted = eng._evicted, []
-                for r in reversed(evicted):
-                    pending.appendleft(self._by_req[id(r)])
+            with tracer.span("orch.pull"):
+                while True:
+                    try:
+                        sreq = self._submitted.get_nowait()
+                    except queue.Empty:
+                        break
+                    sreq._req = self._to_engine_request(sreq)
+                    reject = eng._reject_reason(sreq._req)
+                    if reject is not None:
+                        self._finish(sreq, error=reject)
+                        continue
+                    self._by_req[id(sreq._req)] = sreq
+                    pending.append(sreq)
+                    fresh = True
+                # pool-dry evictions resume at the head of the line
+                if eng._evicted:
+                    evicted, eng._evicted = eng._evicted, []
+                    for r in reversed(evicted):
+                        pending.appendleft(self._by_req[id(r)])
+                self._queue_depth.set(len(pending))
             if fresh and ocfg.batch_window_s > 0 and eng.free_slots():
-                time.sleep(ocfg.batch_window_s)   # coalesce one batch
+                with tracer.span("orch.idle", kind="batch_window"):
+                    time.sleep(ocfg.batch_window_s)   # coalesce one batch
                 continue
             # bucketed admission: one shared-bucket prefill per batch
             if pending and eng.free_slots():
-                batch = [pending.popleft()
-                         for _ in range(min(len(pending), eng.free_slots()))]
-                ok = eng.add_requests([s._req for s in batch])
-                failed = [s for s, admitted in zip(batch, ok) if not admitted]
-                for s in reversed(failed):    # infeasible right now: retry
-                    pending.appendleft(s)     # in FIFO order next tick
+                with tracer.span("orch.admit", n=len(pending)):
+                    batch = [pending.popleft() for _ in
+                             range(min(len(pending), eng.free_slots()))]
+                    ok = eng.add_requests([s._req for s in batch])
+                    failed = [s for s, admitted in zip(batch, ok)
+                              if not admitted]
+                    for s in reversed(failed):   # infeasible right now:
+                        pending.appendleft(s)    # retry in FIFO order
+                self._queue_depth.set(len(pending))
             active = any(r is not None for r in eng.slot_req)
             if active:
-                eng.step()
+                with tracer.span("orch.step"):
+                    eng.step()
             # retire finished requests (admission can finish prompt-only
             # requests too, so scan the full map)
-            done_ids = [rid for rid, s in self._by_req.items()
-                        if s._req.done and s not in pending]
-            for rid in done_ids:
-                s = self._by_req.pop(rid)
-                self._finish(s, error=s._req.error)
+            with tracer.span("orch.retire"):
+                done_ids = [rid for rid, s in self._by_req.items()
+                            if s._req.done and s not in pending]
+                for rid in done_ids:
+                    s = self._by_req.pop(rid)
+                    self._finish(s, error=s._req.error)
             if self._stop.is_set() and not pending and not active \
                     and self._submitted.empty() and not eng._evicted:
                 self._stream_q.put(("stop",))
                 return
             if not active and not pending:
-                time.sleep(ocfg.poll_interval_s)
+                with tracer.span("orch.idle", kind="poll"):
+                    time.sleep(ocfg.poll_interval_s)
 
     def _to_engine_request(self, sreq: StreamingRequest) -> Request:
         toks = (self.tokenize(sreq.prompt)
@@ -272,13 +296,16 @@ class Orchestrator:
                 item[1]._done.set()
                 continue
             _, sreq, toks = item
-            sreq.out_tokens.extend(toks)
-            piece = ""
-            if self.ocfg.detokenize:
-                piece = self.detokenize(toks)
-                sreq.out_text += piece
-            if sreq.on_token is not None:
-                sreq.on_token(sreq, toks, piece)
+            # cat="detok" → the breakdown report counts this thread's work
+            # as concurrent with the scheduler, not extra wall time
+            with self.tracer.span("orch.detok", cat="detok", n=len(toks)):
+                sreq.out_tokens.extend(toks)
+                piece = ""
+                if self.ocfg.detokenize:
+                    piece = self.detokenize(toks)
+                    sreq.out_text += piece
+                if sreq.on_token is not None:
+                    sreq.on_token(sreq, toks, piece)
 
     # ---- lifecycle ----
     def close(self, timeout: Optional[float] = 60.0) -> None:

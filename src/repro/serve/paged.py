@@ -24,6 +24,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..obs.tracer import NULL_SPAN
+
 TRASH_PAGE = 0
 
 
@@ -33,19 +35,44 @@ def pages_for(tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over a fixed page population (page 0 reserved)."""
+    """Free-list allocator over a fixed page population (page 0 reserved).
 
-    def __init__(self, num_pages: int, page_size: int):
+    ``metrics``/``tracer`` (:mod:`repro.obs`) are optional: when given,
+    alloc/free/fork maintain ``pages.*`` counters plus the ``pages.live``
+    gauge, and each mutation gets a span (cat ``alloc``) while tracing
+    is enabled."""
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 metrics=None, tracer=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the trash page)")
         if page_size < 1:
             raise ValueError("page_size must be >= 1")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.metrics = metrics
+        self.tracer = tracer
         # LIFO free list keeps recently-freed (cache-warm) pages hot
         self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._refs = np.zeros(num_pages, np.int32)
         self._refs[TRASH_PAGE] = 1          # never allocatable
+
+    _COUNTERS = {"alloc": "pages.allocated", "free": "pages.freed",
+                 "fork": "pages.forked"}
+
+    def _count(self, op: str, n: int) -> None:
+        m = self.metrics
+        if m is None:
+            return
+        m.counter(f"pages.{op}_calls").inc()
+        m.counter(self._COUNTERS[op]).inc(n)
+        m.gauge("pages.live").set(self.live_pages)
+
+    def _span(self, op: str):
+        tr = self.tracer
+        if tr is None:
+            return NULL_SPAN
+        return tr.span(f"pages.{op}", cat="alloc")
 
     @property
     def num_free(self) -> int:
@@ -63,11 +90,15 @@ class PageAllocator:
         """Allocate ``n`` pages (refcount 1 each); None if insufficient —
         all-or-nothing, so a partially admissible request never strands
         pages."""
-        if n > len(self._free):
-            return None
-        pages = [self._free.pop() for _ in range(n)]
-        self._refs[pages] = 1
-        return pages
+        with self._span("alloc"):
+            if n > len(self._free):
+                if self.metrics is not None:
+                    self.metrics.counter("pages.alloc_failures").inc()
+                return None
+            pages = [self._free.pop() for _ in range(n)]
+            self._refs[pages] = 1
+            self._count("alloc", n)
+            return pages
 
     def _check_pages(self, pages: List[int], op: str) -> None:
         """Validate a page list BEFORE mutating any state, so an invalid
@@ -95,11 +126,13 @@ class PageAllocator:
         """Drop one reference per page; pages return to the free list at
         refcount 0.  All-or-nothing: an invalid list (double free, trash
         page, out of range) raises before any refcount moves."""
-        self._check_pages(pages, "free")
-        for p in pages:
-            self._refs[p] -= 1
-            if self._refs[p] == 0:
-                self._free.append(p)
+        with self._span("free"):
+            self._check_pages(pages, "free")
+            for p in pages:
+                self._refs[p] -= 1
+                if self._refs[p] == 0:
+                    self._free.append(p)
+            self._count("free", len(pages))
 
     def fork(self, pages: List[int]) -> List[int]:
         """Share ``pages`` with a new owner (prefix sharing): bump each
@@ -107,10 +140,12 @@ class PageAllocator:
         copy-on-write before mutating a page whose refcount is > 1.
         All-or-nothing: forking a freed / trash / out-of-range page raises
         before any refcount moves."""
-        self._check_pages(pages, "fork")
-        for p in pages:
-            self._refs[p] += 1
-        return list(pages)
+        with self._span("fork"):
+            self._check_pages(pages, "fork")
+            for p in pages:
+                self._refs[p] += 1
+            self._count("fork", len(pages))
+            return list(pages)
 
     def ref_count(self, page: int) -> int:
         return int(self._refs[page])

@@ -78,7 +78,7 @@ class SpeculativeEngine(ServingEngine):
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
                  policy: TCPolicy = BF16, *, gamma: int = 4,
                  draft_weights_fmt: str = "posit8_2",
-                 draft_kv_format: str = "posit8"):
+                 draft_kv_format: str = "posit8", tracer=None):
         if gamma < 1:
             raise ValueError(f"gamma must be >= 1, got {gamma}")
         if any(bt != "attn" for bt in cfg.block_types) or cfg.window \
@@ -87,7 +87,7 @@ class SpeculativeEngine(ServingEngine):
                 "speculative decoding needs a decoder-only attention "
                 "stack without MoE or sliding windows (rollback is a row "
                 f"rewind); {cfg.name} is not one")
-        super().__init__(cfg, params, scfg, policy)
+        super().__init__(cfg, params, scfg, policy, tracer=tracer)
         self.gamma = gamma
         self._T = gamma + 1                     # max verify chunk length
         if scfg.max_len <= 2:
@@ -96,16 +96,30 @@ class SpeculativeEngine(ServingEngine):
         self.draft = draft_policy(self.policy, weights_fmt=draft_weights_fmt,
                                   kv_format=draft_kv_format)
         b, L = scfg.max_batch, scfg.max_len
-        # the draft runs its own three-stage engine over a dense ring
-        self.draft_engine = TransprecisionEngine(cfg, self.draft, b, L)
+        # the draft runs its own three-stage engine over a dense ring; it
+        # shares the driver's tracer + registry so draft stage time shows
+        # up under "draft.generate" etc., separate from the target stages
+        self.draft_engine = TransprecisionEngine(
+            cfg, self.draft, b, L, tracer=self.tracer,
+            metrics=self.metrics, stage_prefix="draft.")
         self.draft_cache = self.draft_engine.init_decode_state()
         self.draft_pos = np.zeros(b, np.int64)  # committed draft rows/slot
         # committed token the draft cache is missing (all-accepted rounds
         # leave the draft one row behind); None = in sync
         self._lag_tok: List[Optional[int]] = [None] * b
 
-        self.stats.update(spec_rounds=0, draft_steps=0, drafts_proposed=0,
-                          drafts_accepted=0)
+        self.stats.bind_counters("spec_rounds", "draft_steps",
+                                 "drafts_proposed", "drafts_accepted")
+        # first-class speculative distributions: per-round verify chunk
+        # length, accepted drafts per slot-round, and KV rows rolled back
+        # per slot-round (the cost of a rejection)
+        self._h_chunk = self.metrics.histogram("spec.chunk_T",
+                                               lo=1.0, hi=1e3, ratio=1.25)
+        self._h_accept = self.metrics.histogram("spec.accepted_per_round",
+                                                lo=1.0, hi=1e3, ratio=1.25)
+        self._h_rollback = self.metrics.histogram("spec.rollback_rows",
+                                                  lo=1.0, hi=1e3,
+                                                  ratio=1.25)
         # the draft ring is real HBM: re-report the footprint including it
         self.stats["kv_cache_bytes"] = self.kv_cache_bytes()
 
@@ -213,6 +227,8 @@ class SpeculativeEngine(ServingEngine):
         pre_pos = self.slot_pos.copy()          # committed rows per slot
         pre_draft = self.draft_pos.copy()
 
+        self._h_chunk.observe(T)
+
         # ---- draft phase: gamma lockstep low-precision steps ----
         cur = np.zeros((b, 1), np.int32)
         proposals = np.zeros((b, gamma), np.int32)
@@ -224,21 +240,23 @@ class SpeculativeEngine(ServingEngine):
                 catchup[i] = True
             else:
                 cur[i, 0] = self.last_tok[i, 0]
-        for s in range(gamma):
-            self.draft_cache["tok"] = jnp.asarray(cur)
-            self.draft_cache, logits_d = self.draft_engine.generate(
-                self.params, self.draft_cache)
-            toks = np.asarray(logits_d)[:, : self.cfg.vocab].argmax(-1)
-            self.stats["draft_steps"] += 1
-            for i in active:
-                if s == 0 and catchup[i]:
-                    # catch-up: the output re-predicts a token we already
-                    # committed; discard it and feed the real one next
-                    cur[i, 0] = self.last_tok[i, 0]
-                    continue
-                proposals[i, nprop[i]] = toks[i]
-                nprop[i] += 1
-                cur[i, 0] = toks[i]
+        with self.tracer.span("spec.draft", cat="host"):
+            for s in range(gamma):
+                self.draft_cache["tok"] = jnp.asarray(cur)
+                self.draft_cache, logits_d = self.draft_engine.generate(
+                    self.params, self.draft_cache)
+                toks = np.asarray(logits_d)[:, : self.cfg.vocab].argmax(-1)
+                self.stats["draft_steps"] += 1
+                for i in active:
+                    if s == 0 and catchup[i]:
+                        # catch-up: the output re-predicts a token we
+                        # already committed; discard it and feed the real
+                        # one next
+                        cur[i, 0] = self.last_tok[i, 0]
+                        continue
+                    proposals[i, nprop[i]] = toks[i]
+                    nprop[i] += 1
+                    cur[i, 0] = toks[i]
         self.stats["drafts_proposed"] += int(nprop[active].sum())
 
         # ---- verify phase: one target-precision chunk pass ----
@@ -262,83 +280,91 @@ class SpeculativeEngine(ServingEngine):
         self.stats["spec_rounds"] += 1
 
         # ---- per-slot acceptance + commit ----
-        for i in active:
-            req = self.slot_req[i]
-            n = int(nprop[i])
-            k = 0
-            while k < n and proposals[i, k] == g[i, k]:
-                k += 1
-            # emission budget: keep the stream identical to baseline
-            # greedy, which stops at exactly max_new tokens and frees the
-            # slot once pos reaches max_len - 1 (post-emission check, so
-            # at least one token always lands)
-            cap = max(int(self.scfg.max_len - 1 - pre_pos[i]), 1)
-            k = min(k, req.max_new - len(req.out_tokens) - 1, cap - 1)
-            emitted = [int(t) for t in proposals[i, :k]] + [int(g[i, k])]
-            eos = self.scfg.eos_id
-            if eos is not None and eos in emitted:
-                emitted = emitted[: emitted.index(eos) + 1]
-            # emitted tokens are accepted drafts plus (unless an EOS draft
-            # truncated the list first) one non-draft bonus token
-            self.stats["drafts_accepted"] += min(len(emitted), k)
-            self.last_tok[i, 0] = emitted[-1]
-            self.slot_pos[i] = pre_pos[i] + len(emitted)
-            self._emit(req, emitted)
-            # draft sync: rows the draft holds for the committed prefix
-            drafted_rows = pre_draft[i] + gamma
-            self.draft_pos[i] = min(drafted_rows, self.slot_pos[i])
-            lag = int(self.slot_pos[i] - self.draft_pos[i])
-            self._lag_tok[i] = int(chunk[i, k]) if lag else None
-            if (len(req.out_tokens) >= req.max_new
-                    or (eos is not None and emitted[-1] == eos)
-                    or self.slot_pos[i] >= self.scfg.max_len - 1):
-                req.done = True
-                self._free_request_slot(i)      # resets slot + draft state
+        with self.tracer.span("spec.accept", cat="host"):
+            for i in active:
+                req = self.slot_req[i]
+                n = int(nprop[i])
+                k = 0
+                while k < n and proposals[i, k] == g[i, k]:
+                    k += 1
+                # emission budget: keep the stream identical to baseline
+                # greedy, which stops at exactly max_new tokens and frees
+                # the slot once pos reaches max_len - 1 (post-emission
+                # check, so at least one token always lands)
+                cap = max(int(self.scfg.max_len - 1 - pre_pos[i]), 1)
+                k = min(k, req.max_new - len(req.out_tokens) - 1, cap - 1)
+                emitted = [int(t) for t in proposals[i, :k]] + [int(g[i, k])]
+                eos = self.scfg.eos_id
+                if eos is not None and eos in emitted:
+                    emitted = emitted[: emitted.index(eos) + 1]
+                # emitted tokens are accepted drafts plus (unless an EOS
+                # draft truncated the list first) one non-draft bonus token
+                self.stats["drafts_accepted"] += min(len(emitted), k)
+                self._h_accept.observe(min(len(emitted), k))
+                self.last_tok[i, 0] = emitted[-1]
+                self.slot_pos[i] = pre_pos[i] + len(emitted)
+                self._emit(req, emitted)
+                # draft sync: rows the draft holds for the committed prefix
+                drafted_rows = pre_draft[i] + gamma
+                self.draft_pos[i] = min(drafted_rows, self.slot_pos[i])
+                lag = int(self.slot_pos[i] - self.draft_pos[i])
+                self._lag_tok[i] = int(chunk[i, k]) if lag else None
+                if (len(req.out_tokens) >= req.max_new
+                        or (eos is not None and emitted[-1] == eos)
+                        or self.slot_pos[i] >= self.scfg.max_len - 1):
+                    req.done = True
+                    self._free_request_slot(i)  # resets slot + draft state
 
         # ---- KV rollback: target cache ----
         new_pos = self.slot_pos.copy()          # post-free (0 for done/idle)
-        if self.paged:
-            ps = self.allocator.page_size
-            scrub = np.zeros(b * T, np.int64)   # padded with trash row 0
-            nscrub = 0
-            truncated = False
+        with self.tracer.span("spec.rollback", cat="host"):
             for i in active:
-                if self.slot_req[i] is None:    # freed above: pages already
-                    continue                    # back in the pool
-                sp = self.slot_pages[i]
-                keep = pages_for(int(new_pos[i]), ps)
-                orphans = sp.pages[keep:]
-                for p in range(int(new_pos[i]), int(pre_pos[i]) + T):
-                    scrub[nscrub] = old_pages[i][p // ps] * ps + p % ps
-                    nscrub += 1
-                if orphans:
-                    self.allocator.free(orphans)
-                    del sp.pages[keep:]
-                    self._table[i] = sp.table_row(self._pmax)
-                    truncated = True
-            if truncated:
-                self.cache["page_table"] = jnp.asarray(self._table)
-            self.cache = self.engine.rollback_paged(self.cache, new_pos,
-                                                    scrub)
-        else:
-            # scatter form: only the T rows this round wrote per slot.
-            # Freed slots skip the scrub (their rows are rewritten before
-            # any read on readmission); idle slots no-op.
-            window_end = np.full(b, T, np.int64)
-            scrub_from = window_end.copy()
+                if self.slot_req[i] is not None:
+                    self._h_rollback.observe(int(pre_pos[i]) + T
+                                             - int(new_pos[i]))
+            if self.paged:
+                ps = self.allocator.page_size
+                scrub = np.zeros(b * T, np.int64)  # padded w/ trash row 0
+                nscrub = 0
+                truncated = False
+                for i in active:
+                    if self.slot_req[i] is None:   # freed above: pages
+                        continue                   # already in the pool
+                    sp = self.slot_pages[i]
+                    keep = pages_for(int(new_pos[i]), ps)
+                    orphans = sp.pages[keep:]
+                    for p in range(int(new_pos[i]), int(pre_pos[i]) + T):
+                        scrub[nscrub] = old_pages[i][p // ps] * ps + p % ps
+                        nscrub += 1
+                    if orphans:
+                        self.allocator.free(orphans)
+                        del sp.pages[keep:]
+                        self._table[i] = sp.table_row(self._pmax)
+                        truncated = True
+                if truncated:
+                    self.cache["page_table"] = jnp.asarray(self._table)
+                self.cache = self.engine.rollback_paged(self.cache, new_pos,
+                                                        scrub)
+            else:
+                # scatter form: only the T rows this round wrote per slot.
+                # Freed slots skip the scrub (their rows are rewritten
+                # before any read on readmission); idle slots no-op.
+                window_end = np.full(b, T, np.int64)
+                scrub_from = window_end.copy()
+                for i in active:
+                    window_end[i] = pre_pos[i] + T
+                    scrub_from[i] = (self.slot_pos[i]
+                                     if self.slot_req[i] is not None
+                                     else window_end[i])
+                self.cache = self.engine.rollback_ring(
+                    self.cache, new_pos, window_end, scrub_from, T)
+            # ---- KV rollback: draft ring (always ring layout) ----
+            d_end = np.full(b, gamma, np.int64)
+            d_from = d_end.copy()
             for i in active:
-                window_end[i] = pre_pos[i] + T
-                scrub_from[i] = (self.slot_pos[i]
-                                 if self.slot_req[i] is not None
-                                 else window_end[i])
-            self.cache = self.engine.rollback_ring(
-                self.cache, new_pos, window_end, scrub_from, T)
-        # ---- KV rollback: draft ring (always ring layout) ----
-        d_end = np.full(b, gamma, np.int64)
-        d_from = d_end.copy()
-        for i in active:
-            d_end[i] = pre_draft[i] + gamma
-            d_from[i] = (self.draft_pos[i] if self.slot_req[i] is not None
-                         else d_end[i])
-        self.draft_cache = self.draft_engine.rollback_ring(
-            self.draft_cache, self.draft_pos, d_end, d_from, gamma)
+                d_end[i] = pre_draft[i] + gamma
+                d_from[i] = (self.draft_pos[i]
+                             if self.slot_req[i] is not None
+                             else d_end[i])
+            self.draft_cache = self.draft_engine.rollback_ring(
+                self.draft_cache, self.draft_pos, d_end, d_from, gamma)

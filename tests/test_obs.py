@@ -1,0 +1,332 @@
+"""Observability subsystem: tracer spans, metrics registry, breakdowns.
+
+Covers the guarantees the serving stack leans on:
+
+* span nesting/ordering and online self-time accounting (the basis of
+  the per-stage wall-clock attribution);
+* histogram percentile accuracy vs exact numpy percentiles;
+* registry snapshot round-trip (``from_snapshot(snap).snapshot() ==
+  snap`` and JSON-stable);
+* Chrome-trace export schema (loadable by chrome://tracing / Perfetto);
+* disabled-tracer overhead bound — the hot serving loop keeps its spans
+  in place permanently, so ``span()`` with tracing off must stay cheap;
+* ``StatsView`` legacy-dict facade semantics;
+* end-to-end: a smoke ``ServingEngine`` run produces a consistent
+  registry, a valid trace, and a stage breakdown that attributes the
+  wall clock.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       StatsView, Tracer, stage_breakdown)
+from repro.obs.report import format_breakdown
+
+
+# ---------------------------------------------------------------- tracer
+
+def test_span_nesting_self_times():
+    tr = Tracer(enabled=True)
+    with tr.span("outer"):
+        time.sleep(0.02)
+        with tr.span("inner"):
+            time.sleep(0.02)
+    st = tr.self_times()
+    assert set(st) == {"outer", "inner"}
+    assert st["outer"]["count"] == 1 and st["inner"]["count"] == 1
+    # outer total covers inner; outer SELF excludes it
+    assert st["outer"]["total_s"] >= st["inner"]["total_s"]
+    assert st["outer"]["self_s"] == pytest.approx(
+        st["outer"]["total_s"] - st["inner"]["total_s"], abs=1e-6)
+    # self times tile the outer wall: sum == outer total
+    assert (st["outer"]["self_s"] + st["inner"]["self_s"]
+            == pytest.approx(st["outer"]["total_s"], abs=1e-6))
+
+
+def test_span_event_ordering():
+    tr = Tracer(enabled=True)
+    with tr.span("a"):
+        with tr.span("b"):
+            pass
+    with tr.span("c"):
+        pass
+    evs = tr.events()
+    # events land at close time: b closes before a, a before c
+    assert [e["name"] for e in evs] == ["b", "a", "c"]
+    b, a, c = evs
+    assert a["t0"] <= b["t0"] <= b["t1"] <= a["t1"] <= c["t0"] <= c["t1"]
+
+
+def test_trace_decorator_and_disabled_passthrough():
+    tr = Tracer(enabled=True)
+
+    @tr.trace("work", cat="host")
+    def work(x):
+        return x + 1
+
+    assert work(1) == 2
+    assert tr.self_times()["work"]["count"] == 1
+    tr.disable()
+    assert work(2) == 3                       # still callable, unrecorded
+    assert tr.self_times()["work"]["count"] == 1
+
+
+def test_thread_aware_stacks():
+    """Spans on different threads must not see each other as parents."""
+    tr = Tracer(enabled=True)
+    go = threading.Event()
+
+    def worker():
+        go.wait(5)
+        with tr.span("child_thread"):
+            time.sleep(0.01)
+
+    t = threading.Thread(target=worker, name="obs-worker")
+    with tr.span("main_span"):
+        t.start()
+        go.set()
+        t.join()
+    st = tr.self_times()
+    # worker span is NOT a child of main_span: main self == main total
+    assert st["main_span"]["self_s"] == pytest.approx(
+        st["main_span"]["total_s"], abs=1e-6)
+    tids = {e["tid"] for e in tr.events()}
+    assert len(tids) == 2
+    # thread-name metadata makes it into the Chrome trace
+    names = {e["args"]["name"] for e in tr.chrome_trace()["traceEvents"]
+             if e["ph"] == "M"}
+    assert "obs-worker" in names
+
+
+def test_ring_bounded_aggregates_exact():
+    tr = Tracer(capacity=8, enabled=True)
+    for _ in range(100):
+        with tr.span("tick"):
+            pass
+    assert len(tr.events()) == 8              # ring dropped old events
+    assert tr.self_times()["tick"]["count"] == 100   # aggregates exact
+
+
+def test_chrome_trace_schema(tmp_path):
+    tr = Tracer(enabled=True)
+    with tr.span("stage.dispatch", cat="engine", n=3):
+        pass
+    path = tmp_path / "t.trace.json"
+    tr.write_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    x = [e for e in evs if e["ph"] == "X"]
+    m = [e for e in evs if e["ph"] == "M"]
+    assert len(x) == 1 and len(m) >= 1
+    ev = x[0]
+    for key in ("name", "cat", "pid", "tid", "ts", "dur"):
+        assert key in ev
+    assert ev["dur"] >= 0 and ev["ts"] >= 0   # µs, relative to epoch
+    assert ev["args"] == {"n": 3}
+    assert all(e["args"]["name"] for e in m)  # thread_name metadata
+
+
+def test_disabled_overhead_bound():
+    """Hot-loop spans with tracing off must stay near-free (< ~5 µs/call,
+    generous for CI noise; the real cost is one attr check + return)."""
+    tr = Tracer(enabled=False)
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("hot"):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 5e-6, f"disabled span costs {per_call * 1e6:.2f} µs"
+    assert not tr.events() and not tr.self_times()
+
+
+def test_tracer_reset_and_capacity_validation():
+    tr = Tracer(enabled=True)
+    with tr.span("x"):
+        pass
+    tr.reset()
+    assert not tr.events() and not tr.self_times()
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+# --------------------------------------------------------------- metrics
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("tokens")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = reg.gauge("depth")
+    g.set(3)
+    g.inc(-1)
+    assert g.value == 2
+    # get-or-create returns the same object; kind mismatch raises
+    assert reg.counter("tokens") is c
+    with pytest.raises(TypeError):
+        reg.gauge("tokens")
+    assert "tokens" in reg and "nope" not in reg
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform"])
+def test_histogram_percentiles_vs_numpy(dist):
+    rng = np.random.default_rng(0)
+    if dist == "lognormal":
+        xs = rng.lognormal(mean=-6.0, sigma=1.5, size=5000)   # ~latencies
+    else:
+        xs = rng.uniform(1e-4, 1e-1, size=5000)
+    h = Histogram("lat")
+    for x in xs:
+        h.observe(x)
+    for q in (50, 95, 99):
+        exact = float(np.percentile(xs, q))
+        approx = h.percentile(q)
+        # log-bucketed: relative error bounded by ~one bucket width
+        assert abs(approx - exact) / exact < 0.10, (q, approx, exact)
+    assert h.count == len(xs)
+    assert h.mean == pytest.approx(float(xs.mean()), rel=1e-9)
+    assert h.percentile(0) == pytest.approx(float(xs.min()))
+    assert h.percentile(100) == pytest.approx(float(xs.max()))
+
+
+def test_histogram_edge_cases():
+    h = Histogram("h", lo=1e-3, hi=1e3)
+    assert h.percentile(50) is None           # empty
+    h.observe(0.0)                            # sub-lo bucket
+    h.observe(1e9)                            # clamped to top bucket
+    snap = h.snapshot()
+    assert snap["count"] == 2
+    assert snap["min"] == 0.0 and snap["max"] == 1e9
+    # sub-lo bucket: all we know is "< lo", reported as lo at most
+    assert 0.0 <= h.percentile(1) <= h.lo
+    with pytest.raises(ValueError):
+        Histogram("bad", lo=1.0, hi=0.5)
+
+
+def test_registry_snapshot_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("engine.tokens").inc(42)
+    reg.gauge("orch.queue_depth").set(7)
+    h = reg.histogram("stage.generate.dispatch_s")
+    rng = np.random.default_rng(1)
+    for x in rng.lognormal(-5, 1, 300):
+        h.observe(float(x))
+    snap = reg.snapshot()
+    # JSON-stable: survives a dump/load cycle
+    snap2 = json.loads(json.dumps(snap))
+    restored = MetricsRegistry.from_snapshot(snap2)
+    assert restored.snapshot() == snap
+    assert restored.counter("engine.tokens").value == 42
+    assert (restored.histogram("stage.generate.dispatch_s").percentile(95)
+            == pytest.approx(h.percentile(95)))
+
+
+def test_stats_view_legacy_surface():
+    reg = MetricsRegistry()
+    sv = StatsView(reg, prefix="engine.")
+    sv.bind_counters("tokens", "prefills")
+    sv.bind_gauges("peak_live_pages")
+    sv["tokens"] += 5                        # dict-style increment
+    sv.update(prefills=3)                    # bulk update
+    sv["peak_live_pages"] = 9
+    assert {**sv} == {"tokens": 5, "prefills": 3, "peak_live_pages": 9}
+    assert sv.get("missing", 0) == 0
+    assert len(sv) == 3 and sorted(sv) == ["peak_live_pages", "prefills",
+                                           "tokens"]
+    # registry is the single source of truth
+    assert reg.counter("engine.tokens").value == 5
+    assert sv.metric_name("tokens") == "engine.tokens"
+    # unknown keys auto-bind as gauges (late stats like wall_s)
+    sv["evictions"] = 2
+    assert reg.gauge("engine.evictions").value == 2
+    # bulk reset, as bench warmups do
+    sv.update(tokens=0, prefills=0)
+    assert sv["tokens"] == 0 and reg.counter("engine.tokens").value == 0
+
+
+# ---------------------------------------------------------------- report
+
+def test_stage_breakdown_partitions():
+    tr = Tracer(enabled=True)
+    with tr.span("serve.step"):              # host bucket
+        with tr.span("generate.dispatch", cat="engine"):
+            time.sleep(0.01)
+        with tr.span("generate.device", cat="engine"):
+            time.sleep(0.01)
+    with tr.span("orch.detok", cat="detok"):  # concurrent: excluded
+        time.sleep(0.01)
+    wall = 0.05
+    bd = stage_breakdown(tr, wall)
+    g = bd["stages"]["generate"]
+    assert g["calls"] == 1
+    assert g["dispatch_s"] == pytest.approx(0.01, rel=0.5)
+    assert g["device_s"] == pytest.approx(0.01, rel=0.5)
+    assert "serve.step" in bd["host"]
+    assert "orch.detok" in bd["concurrent"]
+    # attribution sums stages + host but NOT concurrent
+    total = (g["dispatch_s"] + g["device_s"] + sum(bd["host"].values()))
+    assert bd["attributed_s"] == pytest.approx(total, abs=1e-9)
+    assert bd["attributed_s"] + bd["unattributed_s"] == pytest.approx(wall)
+    assert 0 < bd["attributed_frac"] <= 1.0
+    assert "generate" in format_breakdown(bd)
+
+
+def test_stage_breakdown_since_window():
+    tr = Tracer(enabled=True)
+    with tr.span("a.dispatch", cat="engine"):
+        time.sleep(0.01)
+    snap = tr.self_times()
+    with tr.span("b.dispatch", cat="engine"):
+        time.sleep(0.01)
+    bd = stage_breakdown(tr, 0.02, since=snap)
+    assert "b" in bd["stages"] and "a" not in bd["stages"]
+    # full-history breakdown still sees both
+    assert set(stage_breakdown(tr, 0.02)["stages"]) == {"a", "b"}
+
+
+# ----------------------------------------------------- engine integration
+
+def test_serving_engine_observability():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import lm
+    from repro.serve.engine import Request, ServeConfig, ServingEngine
+
+    cfg = get_config("paper-edge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=2, max_len=64, kv_format="posit8")
+    eng = ServingEngine(cfg, params, scfg,
+                        tracer=Tracer(enabled=True))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=4)
+            for i in range(3)]
+    t0 = time.perf_counter()
+    stats = eng.serve(reqs)
+    wall = time.perf_counter() - t0
+
+    # legacy stats keys are live views of the registry
+    snap = eng.metrics.snapshot()
+    assert stats["tokens"] == snap["counters"]["engine.tokens"]
+    assert stats["prefills"] == snap["counters"]["engine.prefills"]
+    # per-stage latency histograms recorded one observation per call
+    assert (snap["histograms"]["stage.generate.dispatch_s"]["count"]
+            == stats["decode_steps"])
+    assert (snap["histograms"]["stage.prefill.dispatch_s"]["count"]
+            == stats["prefills"])
+
+    # breakdown attributes the serve loop's wall clock
+    bd = stage_breakdown(eng.tracer, wall)
+    assert {"prefill", "insert", "generate"} <= set(bd["stages"])
+    assert bd["attributed_frac"] >= 0.9
+
+    # the trace is valid Chrome-trace JSON with engine spans in it
+    doc = json.loads(json.dumps(eng.tracer.chrome_trace()))
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert "generate.dispatch" in names and "generate.device" in names
