@@ -27,6 +27,14 @@ per engine stage, orchestrator overhead) from the span tracer
 (:mod:`repro.obs`); set ``REPRO_TRACE=1`` to additionally write the full
 Chrome trace to ``results/BENCH_serving.trace.json``.
 
+Each load point also reports modeled **energy** (:mod:`repro.obs.energy`:
+TALU pJ/MAC x HLO FLOPs + DRAM pJ/byte x HBM bytes, times the per-stage
+call-counter deltas over the window) as joules/token and tok/J, plus SLO
+violation counts against fixed TTFT/ITL thresholds; the cumulative
+``energy_breakdown`` (per-stage precision mix included) lands in the
+JSON, and every request's lifecycle decomposition is appended to
+``results/BENCH_serving.requests.jsonl``.
+
 Writes ``benchmarks/results/BENCH_serving.json``.
 
   PYTHONPATH=src python -m benchmarks.run serving
@@ -42,7 +50,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.obs import Tracer, stage_breakdown
+from repro.obs import EnergyAccountant, Tracer, stage_breakdown
 from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
                                       StreamingRequest)
@@ -50,6 +58,9 @@ from repro.serve.orchestrator import (Orchestrator, OrchestratorConfig,
 LOAD_FACTORS = (0.5, 1.0, 2.0)      # x the measured service rate
 MAX_BATCH, MAX_LEN, MAX_NEW, N_REQ = 2, 64, 8, 8
 KV_FORMAT = "posit8"
+# fixed SLOs for the violation counters: loose enough that the 0.5x load
+# point passes on CI CPUs, tight enough that saturation shows up
+TTFT_SLO_S, ITL_SLO_S = 2.0, 1.0
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
@@ -63,12 +74,24 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
 
 
-def _run_load(eng, prompts, rate_rps, rng):
+def _slo_counters(eng):
+    c = eng.metrics.snapshot()["counters"]
+    return {k: int(c.get(f"orch.slo.{k}", 0))
+            for k in ("ttft_total", "ttft_violations",
+                      "itl_total", "itl_violations")}
+
+
+def _run_load(eng, prompts, rate_rps, rng, acct=None, request_log=None):
     """Submit N_REQ prompts with Poisson gaps at rate_rps; return metrics."""
     ev0 = eng.stats.get("evictions", 0)
     since = eng.tracer.self_times()
+    slo0 = _slo_counters(eng)
+    calls0 = acct.calls_snapshot() if acct is not None else {}
     orch = Orchestrator(eng, OrchestratorConfig(max_queue=4 * N_REQ,
-                                                detokenize=False))
+                                                detokenize=False,
+                                                ttft_slo_s=TTFT_SLO_S,
+                                                itl_slo_s=ITL_SLO_S,
+                                                request_log=request_log))
     sreqs = [StreamingRequest(p, max_new=MAX_NEW) for p in prompts]
     gaps = rng.exponential(1.0 / rate_rps, size=len(sreqs))
     for sreq, gap in zip(sreqs, gaps):
@@ -101,6 +124,21 @@ def _run_load(eng, prompts, rate_rps, rng):
     bd = stage_breakdown(eng.tracer, wall, since=since)
     assert bd["attributed_frac"] >= 0.9, \
         f"stage breakdown covers only {bd['attributed_frac']:.0%} of wall"
+    # the tracer's queue bucket must reproduce the per-request stamps:
+    # both derive from the same submit/admit perf_counter pairs
+    stamp_wait = sum(s.lifecycle_deltas().get("queue_wait_s", 0.0)
+                     for s in sreqs)
+    trace_wait = bd["queue"].get("queue.wait", {}).get("total_s", 0.0)
+    assert abs(trace_wait - stamp_wait) <= 1e-6 + 1e-3 * stamp_wait, \
+        f"queue bucket {trace_wait:.6f}s != stamp sum {stamp_wait:.6f}s"
+    energy = None
+    if acct is not None:
+        delta = acct.calls_delta(acct.calls_snapshot(), calls0)
+        e = acct.breakdown(calls=delta, tokens=tokens)
+        energy = {"joules": e["joules_total"],
+                  "joules_per_token": e["joules_per_token"],
+                  "tok_per_joule": e["tok_per_joule"]}
+    slo1 = _slo_counters(eng)
     return {"offered_rps": rate_rps,
             "measured_offered_rps": measured_offered,
             "achieved_rps": achieved_rps,
@@ -110,6 +148,8 @@ def _run_load(eng, prompts, rate_rps, rng):
             "itl_ms": {"p50": _pct(itl, 50) * 1e3,
                        "p99": _pct(itl, 99) * 1e3},
             "evictions": eng.stats.get("evictions", 0) - ev0,
+            "energy": energy,
+            "slo": {k: slo1[k] - slo0[k] for k in slo1},
             "stage_breakdown": bd}
 
 
@@ -122,6 +162,10 @@ def run():
     eng = ServingEngine(cfg, params, scfg,
                         tracer=Tracer(capacity=1 << 18, enabled=True))
     prompts = _prompts(cfg)
+    acct = EnergyAccountant(eng)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    reqlog = os.path.join(RESULTS_DIR, "BENCH_serving.requests.jsonl")
+    open(reqlog, "w").close()   # truncate: one file per bench run
 
     # calibrate: back-to-back batch (compiles all prefill buckets + the
     # decode step, so the sweep below measures steady-state latency)
@@ -132,11 +176,16 @@ def run():
     out = {"shape": {"max_batch": MAX_BATCH, "max_len": MAX_LEN,
                      "max_new": MAX_NEW, "requests": N_REQ,
                      "kv_format": KV_FORMAT},
-           "service_rps": service_rps, "loads": []}
+           "slo": {"ttft_s": TTFT_SLO_S, "itl_s": ITL_SLO_S},
+           "service_rps": service_rps, "loads": [],
+           "request_log": os.path.basename(reqlog)}
     for f in LOAD_FACTORS:
-        m = _run_load(eng, prompts, rate_rps=f * service_rps, rng=rng)
+        m = _run_load(eng, prompts, rate_rps=f * service_rps, rng=rng,
+                      acct=acct, request_log=reqlog)
         m["load_factor"] = f
         out["loads"].append(m)
+    # cumulative table (per-stage pJ, precision mix) over the whole run
+    out["energy_breakdown"] = acct.breakdown()
     if os.environ.get("REPRO_TRACE"):
         os.makedirs(RESULTS_DIR, exist_ok=True)
         path = os.path.join(RESULTS_DIR, "BENCH_serving.trace.json")
@@ -153,13 +202,26 @@ def main(verbose=False):
               f"max_new={out['shape']['max_new']})")
         for m in out["loads"]:
             bd = m["stage_breakdown"]
+            en = m["energy"] or {}
+            tpj = en.get("tok_per_joule")
+            ej = f", {tpj:.0f} tok/J" if tpj else ""
+            slo = m["slo"]
             print(f"  load {m['load_factor']:.1f}x: offered "
                   f"{m['offered_rps']:.2f} rps, achieved "
                   f"{m['achieved_rps']:.2f} rps | TTFT p50/p99 "
                   f"{m['ttft_ms']['p50']:.0f}/{m['ttft_ms']['p99']:.0f} ms"
                   f" | ITL p50/p99 {m['itl_ms']['p50']:.0f}/"
                   f"{m['itl_ms']['p99']:.0f} ms | "
+                  f"{m['tok_per_s']:.1f} tok/s{ej} | "
+                  f"SLO viol ttft {slo['ttft_violations']}/"
+                  f"{slo['ttft_total']} itl {slo['itl_violations']}/"
+                  f"{slo['itl_total']} | "
                   f"{bd['attributed_frac']:.0%} wall attributed")
+        eb = out["energy_breakdown"]
+        if eb["joules_per_token"] is not None:
+            print(f"  energy (cumulative): "
+                  f"{eb['joules_per_token'] * 1e6:.1f} uJ/token, "
+                  f"{eb['tok_per_joule']:.0f} tok/J")
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=1)

@@ -43,7 +43,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import lm
-from repro.obs import Tracer, stage_breakdown
+from repro.obs import EnergyAccountant, Tracer, stage_breakdown
 from repro.serve.engine import Request, ServeConfig, ServingEngine
 from repro.serve.speculative import SpeculativeEngine
 
@@ -72,6 +72,9 @@ def _serve(engine_f, cfg, tracer):
     stats["wall_s"] = wall
     stats["tok_per_s"] = stats["tokens"] / max(wall, 1e-9)
     stats["stage_breakdown"] = stage_breakdown(tracer, wall, since=since)
+    # fresh engine per cell -> fresh registry: the cumulative breakdown
+    # IS the cell's energy (per-stage pJ table + this cell's call counts)
+    stats["energy_breakdown"] = EnergyAccountant(eng).breakdown()
     return [r.out_tokens for r in reqs], stats
 
 
@@ -94,7 +97,10 @@ def run():
             tracer)
         out["baselines"][layout] = {
             "tok_per_s": round(base_stats["tok_per_s"], 1),
-            "stage_breakdown": base_stats["stage_breakdown"]}
+            "stage_breakdown": base_stats["stage_breakdown"],
+            "energy_breakdown": base_stats["energy_breakdown"]}
+        target_step_pj = (base_stats["energy_breakdown"]["stages"]
+                          .get("generate", {}).get("pj_per_call"))
         for gamma in GAMMAS:
             spec_out, s = _serve(
                 lambda: SpeculativeEngine(cfg, params, scfg, gamma=gamma,
@@ -113,12 +119,29 @@ def run():
                 "tok_per_s": {"baseline": round(base_stats["tok_per_s"], 1),
                               "speculative": round(s["tok_per_s"], 1)},
                 "stage_breakdown": s["stage_breakdown"],
+                "energy_breakdown": s["energy_breakdown"],
             }
+            # the speculative win in energy terms: one posit8-weight
+            # draft step must cost less than one target-precision decode
+            # step of the same layout's baseline engine (the spec engine
+            # itself never runs a bare `generate`; verify replaces it)
+            draft_step_pj = (s["energy_breakdown"]["stages"]
+                            .get("draft.generate", {}).get("pj_per_call"))
+            cell["energy"] = {
+                "draft_step_pj": draft_step_pj,
+                "target_step_pj": target_step_pj,
+                "joules_per_token":
+                    s["energy_breakdown"]["joules_per_token"],
+                "draft_below_target": bool(
+                    draft_step_pj is not None and target_step_pj is not None
+                    and draft_step_pj < target_step_pj)}
             out["cells"][f"{layout}_gamma{gamma}"] = cell
     cells = out["cells"].values()
     out["all_identical"] = all(c["identical"] for c in cells)
     out["best_target_steps_per_token"] = min(
         c["target_steps_per_token"] for c in cells)
+    out["draft_energy_below_target"] = all(
+        c["energy"]["draft_below_target"] for c in cells)
     if os.environ.get("REPRO_TRACE"):
         os.makedirs(RESULTS_DIR, exist_ok=True)
         path = os.path.join(RESULTS_DIR, "BENCH_speculative.trace.json")
@@ -135,12 +158,22 @@ def main(verbose=True):
               f"max_new={sh['max_new']}, kv={sh['kv_format']}; "
               f"CPU reference) ==")
         print(f"{'cell':>14s} {'ident':>6s} {'accept':>7s} "
-              f"{'tgt steps/tok':>14s} {'draft steps/tok':>16s}")
+              f"{'tgt steps/tok':>14s} {'draft steps/tok':>16s} "
+              f"{'draft/tgt uJ':>13s} {'uJ/tok':>8s}")
         for name, c in out["cells"].items():
+            en = c["energy"]
+            dt = (f"{en['draft_step_pj'] * 1e-6:.0f}/"
+                  f"{en['target_step_pj'] * 1e-6:.0f}"
+                  if en["draft_step_pj"] and en["target_step_pj"] else "-")
+            jpt = en["joules_per_token"]
             print(f"{name:>14s} {str(c['identical']):>6s} "
                   f"{c['acceptance_rate']:>7.2f} "
                   f"{c['target_steps_per_token']:>14.2f} "
-                  f"{c['draft_steps_per_token']:>16.2f}")
+                  f"{c['draft_steps_per_token']:>16.2f} "
+                  f"{dt:>13s} "
+                  f"{jpt * 1e6 if jpt else 0:>8.1f}")
+        print(f"  draft step below target step energy: "
+              f"{out['draft_energy_below_target']}")
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, "BENCH_speculative.json"), "w") as f:
         json.dump(out, f, indent=1)

@@ -72,6 +72,29 @@ POSIT_ONLY = (VMULT, DFMA, FUSED_MAC)
 
 
 # ---------------------------------------------------------------------------
+# Serving energy-model hooks (repro.obs.energy)
+# ---------------------------------------------------------------------------
+
+#: Modeled off-chip memory access energy, pJ/byte.  LPDDR4-class DRAM at
+#: the paper's 28 nm edge deployment point: published LPDDR4/LPDDR4X
+#: figures cluster around 15-25 pJ/byte device+PHY (vs ~2 pJ/byte for
+#: on-package HBM2 and >50 pJ/byte for DDR3) — 20 pJ/byte is the
+#: conventional round number for edge-SoC energy models.  Every
+#: joules/token figure this repo reports scales linearly in this
+#: constant, so it is a single documented knob, not a fit.
+DRAM_PJ_PER_BYTE = 20.0
+
+
+def pj_per_mac(bits: int, dp: DesignPoint = TALU) -> float:
+    """Per-MAC energy (pJ) at an operand bitwidth, from the design
+    point's published PDP row (Table IV: TALU 38.9/43.44/46.15 pJ at
+    8/16/32 bit).  Bitwidths snap UP to the next supported class — a
+    posit(4,1) MAC still occupies the 8-bit datapath slice."""
+    idx = 0 if bits <= dp.bits[0] else (1 if bits <= dp.bits[1] else 2)
+    return dp.pdp_pj[idx]
+
+
+# ---------------------------------------------------------------------------
 # Stillmaker-Baas scaling [26]: area ~ s^2, delay ~ s, power ~ s * v^2
 # (general-purpose fits; the paper applies this to normalize 90/45 nm
 #  designs to 28 nm — Table IV carries the POST-scaling values, so this

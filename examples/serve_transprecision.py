@@ -195,6 +195,30 @@ def main():
     # file in chrome://tracing or https://ui.perfetto.dev; the CLI
     # equivalent is `python -m repro.launch.serve --trace-out ...`
 
+    # --- energy & SLO observability (PR 8) -----------------------------
+    # EnergyAccountant prices each jitted stage from its *compiled* HLO:
+    # MAC flops (dot/conv only — the posit fake-quant emulation is the
+    # modeled ALU's native datapath, never priced as flops) x the
+    # paper's Table-IV pJ/MAC at the stage's TCPolicy bit widths, plus
+    # packed-weight DRAM traffic at 20 pJ/byte.  Multiplied by the live
+    # per-stage call counters this gives joules/token next to tok/s —
+    # the measurement half of ROADMAP direction 6.
+    from repro.obs import EnergyAccountant, format_energy
+    print("\nEnergy accounting (modeled, paper Table-IV pJ/MAC):")
+    acct = EnergyAccountant(engine)
+    print(format_energy(acct.breakdown()))
+    # Per-request lifecycle + SLOs: with an Orchestrator, every request
+    # carries six stamps (submit -> admit -> prefill_done -> insert_done
+    # -> first_token -> finish), so TTFT decomposes into queue-wait vs
+    # prefill vs insert (req.lifecycle_deltas()).  OrchestratorConfig
+    # (ttft_slo_s=, itl_slo_s=) maintains orch.slo.* violation counters,
+    # and request_log="out.jsonl" appends one JSON line per terminal
+    # request.  CLI: python -m repro.launch.serve --energy \
+    #   --request-log out.jsonl --ttft-slo 200 --itl-slo 50
+    # CI gates the trajectory: scripts/bench_compare.py diffs every
+    # bench's joules/token, acceptance rate, and latency percentiles
+    # against benchmarks/baselines/.
+
 
 if __name__ == "__main__":
     main()

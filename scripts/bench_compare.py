@@ -1,0 +1,193 @@
+"""Bench-trajectory regression gate.
+
+Diffs fresh ``benchmarks/results/BENCH_*.json`` artifacts against the
+committed baselines in ``benchmarks/baselines/`` and fails (exit 1) on
+regressions, so a PR that silently halves serving throughput or doubles
+modeled joules/token trips CI instead of landing.
+
+Two threshold classes, because CI machines are noisy but models are not:
+
+* **tight (25 %)** — deterministic metrics: modeled joules/token (pure
+  function of the compiled HLO + call counts), speculative acceptance
+  rate and target-steps/token (greedy, fixed seeds), paged-KV live/ring
+  byte ratio (pure allocator accounting).  A >25 % move here is a real
+  behavior change, never noise.
+* **loose (3x)** — wall-clock metrics (tok/s, p99 TTFT/ITL): shared CI
+  runners routinely swing 2x; only a catastrophic slowdown should gate.
+
+Each metric carries a direction: ``lower`` means a larger value is the
+regression (latency, joules/token), ``higher`` means a smaller value is
+(throughput, acceptance).  Improvements never fail, and are shown in the
+trajectory table so drive-by wins get recorded by ``--update``.
+
+Usage::
+
+    PYTHONPATH=src python scripts/bench_compare.py serving speculative paged_kv
+    PYTHONPATH=src python scripts/bench_compare.py --update serving ...
+
+``--update`` rewrites the committed baselines from the current results
+(run after an intentional perf change, commit the diff).  A missing
+baseline or result file warns and passes — first runs must not gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, Optional
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO, "benchmarks", "results")
+BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+TIGHT = 0.25    # deterministic metrics: >25 % move == real change
+LOOSE = 3.0     # wall-clock metrics: 2x CI noise is routine, 3x gates
+
+
+def _get(d: Dict[str, Any], path: str) -> Optional[float]:
+    cur: Any = d
+    for k in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(k)] if int(k) < len(cur) else None
+        elif isinstance(cur, dict):
+            cur = cur.get(k)
+        if cur is None:
+            return None
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+# metric spec: result-json path -> (direction, rel threshold)
+# direction "lower": regression when value grows past (1+thr)*baseline
+# direction "higher": regression when value drops below baseline/(1+thr)
+
+def _serving_metrics(d: Dict[str, Any]) -> Dict[str, tuple]:
+    out = {}
+    for i, m in enumerate(d.get("loads", [])):
+        lf = m.get("load_factor", i)
+        out[f"loads.{i}.tok_per_s"] = ("higher", LOOSE,
+                                       f"load {lf}x tok/s")
+        out[f"loads.{i}.ttft_ms.p99"] = ("lower", LOOSE,
+                                         f"load {lf}x TTFT p99 ms")
+        out[f"loads.{i}.itl_ms.p99"] = ("lower", LOOSE,
+                                        f"load {lf}x ITL p99 ms")
+    out["energy_breakdown.joules_per_token"] = (
+        "lower", TIGHT, "joules/token (modeled)")
+    return out
+
+
+def _speculative_metrics(d: Dict[str, Any]) -> Dict[str, tuple]:
+    out = {}
+    for name in d.get("cells", {}):
+        out[f"cells.{name}.acceptance_rate"] = (
+            "higher", TIGHT, f"{name} acceptance")
+        out[f"cells.{name}.target_steps_per_token"] = (
+            "lower", TIGHT, f"{name} target steps/token")
+        out[f"cells.{name}.energy.joules_per_token"] = (
+            "lower", TIGHT, f"{name} joules/token (modeled)")
+        out[f"cells.{name}.tok_per_s.speculative"] = (
+            "higher", LOOSE, f"{name} tok/s")
+    return out
+
+
+def _paged_kv_metrics(d: Dict[str, Any]) -> Dict[str, tuple]:
+    out = {}
+    for fmt in d.get("live_vs_ring", {}):
+        out[f"live_vs_ring.{fmt}"] = (
+            "lower", TIGHT, f"{fmt} live/ring bytes")
+    return out
+
+
+EXTRACTORS = {"serving": _serving_metrics,
+              "speculative": _speculative_metrics,
+              "paged_kv": _paged_kv_metrics}
+
+
+def _load(path: str) -> Optional[Dict[str, Any]]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_bench(name: str, results_dir: str, baseline_dir: str,
+                  update: bool) -> tuple:
+    """Returns (rows, n_regressions) for one bench."""
+    res = _load(os.path.join(results_dir, f"BENCH_{name}.json"))
+    if res is None:
+        print(f"[bench_compare] WARN: no results for {name} "
+              f"(run the bench first) — skipping")
+        return [], 0
+    metrics = EXTRACTORS[name](res)
+    flat = {p: _get(res, p) for p in metrics}
+    base_path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+    if update:
+        os.makedirs(baseline_dir, exist_ok=True)
+        with open(base_path, "w") as f:
+            json.dump({p: v for p, v in flat.items() if v is not None},
+                      f, indent=1, sort_keys=True)
+        print(f"[bench_compare] baseline updated -> {base_path}")
+        return [], 0
+    base = _load(base_path)
+    if base is None:
+        print(f"[bench_compare] WARN: no committed baseline for {name} "
+              f"({base_path}) — passing")
+        return [], 0
+    rows, bad = [], 0
+    for path, (direction, thr, label) in metrics.items():
+        cur, ref = flat.get(path), base.get(path)
+        if cur is None or ref is None or ref == 0:
+            continue
+        ratio = cur / ref
+        if direction == "lower":
+            regressed = ratio > 1.0 + thr
+        else:
+            regressed = ratio < 1.0 / (1.0 + thr)
+        bad += regressed
+        rows.append((name, label, ref, cur, ratio, direction, thr,
+                     regressed))
+    return rows, bad
+
+
+def print_table(rows) -> None:
+    if not rows:
+        return
+    print(f"{'bench':<12s} {'metric':<32s} {'baseline':>12s} "
+          f"{'current':>12s} {'ratio':>7s}  verdict")
+    for name, label, ref, cur, ratio, direction, thr, reg in rows:
+        arrow = "<=" if direction == "lower" else ">="
+        verdict = ("REGRESSED" if reg else
+                   "improved" if (ratio < 1) == (direction == "lower")
+                   and abs(ratio - 1) > 0.02 else "ok")
+        print(f"{name:<12s} {label:<32s} {ref:>12.4g} {cur:>12.4g} "
+              f"{ratio:>7.2f}  {verdict} "
+              f"(gate: ratio {arrow} {1 + thr:.2f}x)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_*.json against committed baselines")
+    ap.add_argument("benches", nargs="+", choices=sorted(EXTRACTORS))
+    ap.add_argument("--results-dir", default=RESULTS_DIR)
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite baselines from current results")
+    args = ap.parse_args(argv)
+    all_rows, total_bad = [], 0
+    for name in args.benches:
+        rows, bad = compare_bench(name, args.results_dir,
+                                  args.baseline_dir, args.update)
+        all_rows.extend(rows)
+        total_bad += bad
+    print_table(all_rows)
+    if total_bad:
+        print(f"[bench_compare] FAIL: {total_bad} metric(s) regressed "
+              f"past their gate")
+        return 1
+    if all_rows:
+        print(f"[bench_compare] OK: {len(all_rows)} metrics within gates")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

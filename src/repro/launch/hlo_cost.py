@@ -82,6 +82,38 @@ def _bytes_of(txt: str) -> float:
     return total
 
 
+def _bytes_map(txt: str) -> Dict[str, float]:
+    """Like :func:`_bytes_of` but split by dtype — the basis of the
+    per-dtype HBM attribution the energy model consumes (posit-packed KV
+    code buffers show up as ``u8``/``u16``, their scales as ``f32``)."""
+    out: Dict[str, float] = {}
+    for dt, dims in _shape_dims(txt):
+        n = 1
+        for d in dims:
+            n *= d
+        out[dt] = out.get(dt, 0.0) + n * _DTYPE_BYTES[dt]
+    return out
+
+
+def _scale_map(bmap: Dict[str, float], k: float) -> Dict[str, float]:
+    return {dt: v * k for dt, v in bmap.items()}
+
+
+def _merge_maps(*maps: Dict[str, float]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for m in maps:
+        for dt, v in m.items():
+            out[dt] = out.get(dt, 0.0) + v
+    return out
+
+
+def _first_dtype(txt: str, default: str = "f32") -> str:
+    for m in _SHAPE_RE.finditer(txt):
+        if m.group(1) in _DTYPE_BYTES:
+            return m.group(1)
+    return default
+
+
 def _elems_of(txt: str) -> float:
     total = 0.0
     for _, dims in _shape_dims(txt):
@@ -214,24 +246,57 @@ def _conv_flops(instr: Instr, table: Dict[str, str]) -> float:
 @dataclasses.dataclass
 class Cost:
     flops: float = 0.0
+    # the dot/convolution share of ``flops``: the program's actual MAC
+    # work.  Elementwise flops (softmax, norms — and crucially the
+    # in-graph fake-quant decode of posit/bf16-packed weights, which a
+    # transprecision ALU performs natively inside the MAC datapath) are
+    # counted in ``flops`` but not here, so the serving energy model can
+    # price real MACs without charging for the QAT emulation.
+    mac_flops: float = 0.0
     bytes: float = 0.0
     coll: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=lambda: {k: {"count": 0.0, "bytes": 0.0}
                                  for k in COLLECTIVES})
     by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-dtype splits of the two totals above (flops keyed by result
+    # dtype, bytes by the dtype of each buffer touched) — the inputs the
+    # serving energy model (repro.obs.energy) attributes to MAC formats
+    # and DRAM traffic.  Invariant: each sums to its total exactly.
+    flops_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    bytes_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def add(self, other: "Cost", mult: float = 1.0):
         self.flops += mult * other.flops
+        self.mac_flops += mult * other.mac_flops
         self.bytes += mult * other.bytes
         for k in COLLECTIVES:
             self.coll[k]["count"] += mult * other.coll[k]["count"]
             self.coll[k]["bytes"] += mult * other.coll[k]["bytes"]
         for k, v in other.by_op.items():
             self.by_op[k] = self.by_op.get(k, 0.0) + mult * v
+        for k, v in other.flops_by_dtype.items():
+            self.flops_by_dtype[k] = (self.flops_by_dtype.get(k, 0.0)
+                                      + mult * v)
+        for k, v in other.bytes_by_dtype.items():
+            self.bytes_by_dtype[k] = (self.bytes_by_dtype.get(k, 0.0)
+                                      + mult * v)
 
-    def _op_bytes(self, op: str, b: float):
+    def _op_bytes(self, op: str, bmap: Dict[str, float]):
+        b = sum(bmap.values())
         self.bytes += b
         self.by_op[op] = self.by_op.get(op, 0.0) + b
+        for dt, v in bmap.items():
+            self.bytes_by_dtype[dt] = self.bytes_by_dtype.get(dt, 0.0) + v
+
+    def _add_flops(self, n: float, dtype: str, mac: bool = False):
+        self.flops += n
+        if mac:
+            self.mac_flops += n
+        if n:
+            self.flops_by_dtype[dtype] = (self.flops_by_dtype.get(dtype, 0.0)
+                                          + n)
 
     @property
     def coll_bytes(self) -> float:
@@ -251,16 +316,18 @@ class HloCostModel:
     # ---- internals ----
     _SLICED = ("slice", "dynamic-slice", "gather")
 
-    def _fusion_param_bytes(self, callee: str, arg_types: List[str]) -> float:
-        """Bytes a fusion actually reads from each operand: a parameter whose
-        only uses inside the fused computation are slice/dynamic-slice/gather
-        contributes the sliced bytes, not the whole array (this is how scan
-        bodies read one layer's weights from the stacked (L, ...) buffers —
-        charging the full stack per trip would overcount HBM traffic ~L x)."""
+    def _fusion_param_bytes(self, callee: str,
+                            arg_types: List[str]) -> Dict[str, float]:
+        """Bytes a fusion actually reads from each operand, split by dtype:
+        a parameter whose only uses inside the fused computation are
+        slice/dynamic-slice/gather contributes the sliced bytes, not the
+        whole array (this is how scan bodies read one layer's weights from
+        the stacked (L, ...) buffers — charging the full stack per trip
+        would overcount HBM traffic ~L x)."""
         key = ("__fb__", callee)
         comp = self.comps.get(callee)
         if comp is None:
-            return sum(_bytes_of(t) for t in arg_types)
+            return _merge_maps(*[_bytes_map(t) for t in arg_types])
         if key not in self._memo:
             params: Dict[str, int] = {}
             for ins in comp.instrs:
@@ -291,10 +358,17 @@ class HloCostModel:
                 access[idx] = None if (full or not used) else sliced
             self._memo[key] = access          # type: ignore
         access = self._memo[key]              # type: ignore
-        total = 0.0
+        total: Dict[str, float] = {}
         for i, t in enumerate(arg_types):
             a = access.get(i)
-            total += _bytes_of(t) if a is None else min(a, _bytes_of(t))
+            full_b = _bytes_of(t)
+            if a is None or a >= full_b:
+                part = _bytes_map(t)
+            else:
+                # sliced reads keep the parameter's dtype (a slice of the
+                # u8 code pool is still u8 traffic)
+                part = {_first_dtype(t): a}
+            total = _merge_maps(total, part)
         return total
 
     def _comp_cost(self, name: str, top: bool) -> Cost:
@@ -336,34 +410,39 @@ class HloCostModel:
             return
         arg_types = _arg_types(ins, table)
         arg_bytes = sum(_bytes_of(t) for t in arg_types)
+        arg_bmap = _merge_maps(*[_bytes_map(t) for t in arg_types])
         # sliced reads/writes only touch the slice, not the whole operand
         if op in ("slice", "dynamic-slice", "gather"):
-            c._op_bytes(op, 2 * _bytes_of(ins.result))
+            c._op_bytes(op, _scale_map(_bytes_map(ins.result), 2))
             return
         if op == "dynamic-update-slice":
-            upd = _bytes_of(arg_types[1]) if len(arg_types) > 1 else \
-                _bytes_of(ins.result)
-            c._op_bytes(op, 2 * upd)
+            upd = arg_types[1] if len(arg_types) > 1 else ins.result
+            c._op_bytes(op, _scale_map(_bytes_map(upd), 2))
             return
         if op == "scatter":
-            upd = _bytes_of(arg_types[-1]) if arg_types else \
-                _bytes_of(ins.result)
-            c.flops += _elems_of(arg_types[-1]) if arg_types else 0.0
-            c._op_bytes(op, 2 * upd)
+            if arg_types:
+                c._add_flops(_elems_of(arg_types[-1]),
+                             _first_dtype(arg_types[-1]))
+                upd = arg_types[-1]
+            else:
+                upd = ins.result
+            c._op_bytes(op, _scale_map(_bytes_map(upd), 2))
             return
         if op == "fusion":
             callee = _called(ins.attrs, "calls")
-            fusion_bytes = _bytes_of(ins.result) + arg_bytes
+            fusion_bmap = _merge_maps(_bytes_map(ins.result), arg_bmap)
             if callee:
                 inner = self._comp_cost(callee, top=False)
-                c.flops += inner.flops
+                c._add_flops(inner.flops, _first_dtype(ins.result))
+                c.mac_flops += inner.mac_flops
                 for k in COLLECTIVES:
                     c.coll[k]["count"] += inner.coll[k]["count"]
                     c.coll[k]["bytes"] += inner.coll[k]["bytes"]
-                fusion_bytes = (_bytes_of(ins.result)
-                                + self._fusion_param_bytes(callee, arg_types))
+                fusion_bmap = _merge_maps(
+                    _bytes_map(ins.result),
+                    self._fusion_param_bytes(callee, arg_types))
             # HBM traffic at the fusion boundary, utilization-aware
-            c._op_bytes(op, fusion_bytes)
+            c._op_bytes(op, fusion_bmap)
             return
         if op == "call":
             callee = _called(ins.attrs, "to_apply")
@@ -381,35 +460,43 @@ class HloCostModel:
                 if op.endswith("-start") and rb >= arg_bytes > 0:
                     rb = rb - arg_bytes
                 c.coll[k]["bytes"] += rb
-                c._op_bytes(op, arg_bytes + rb)
+                c._op_bytes(op, _merge_maps(
+                    arg_bmap, {_first_dtype(ins.result): rb}))
                 return
             if op == k + "-done":
                 return
 
         # --- compute ---
         if op == "dot":
-            c.flops += _dot_flops(ins, table)
-            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            c._add_flops(_dot_flops(ins, table), _first_dtype(ins.result),
+                         mac=True)
+            c._op_bytes(op, _merge_maps(_bytes_map(ins.result), arg_bmap))
             return
         if op == "convolution":
-            c.flops += _conv_flops(ins, table)
-            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            c._add_flops(_conv_flops(ins, table), _first_dtype(ins.result),
+                         mac=True)
+            c._op_bytes(op, _merge_maps(_bytes_map(ins.result), arg_bmap))
             return
         if op in ("reduce", "reduce-window", "map", "scatter",
                   "select-and-scatter"):
             args = _arg_types(ins, table)
-            c.flops += _elems_of(args[0]) if args else _elems_of(ins.result)
-            c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+            if args:
+                c._add_flops(_elems_of(args[0]), _first_dtype(args[0]))
+            else:
+                c._add_flops(_elems_of(ins.result),
+                             _first_dtype(ins.result))
+            c._op_bytes(op, _merge_maps(_bytes_map(ins.result), arg_bmap))
             return
         if op in _ZERO_FLOP:
             if op not in ("parameter", "constant", "tuple",
                           "get-tuple-element", "iota", "after-all",
                           "bitcast", "bitcast-convert"):
-                c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+                c._op_bytes(op, _merge_maps(_bytes_map(ins.result),
+                                            arg_bmap))
             return
         # generic elementwise (add/multiply/exp/...)
-        c.flops += _elems_of(ins.result)
-        c._op_bytes(op, _bytes_of(ins.result) + arg_bytes)
+        c._add_flops(_elems_of(ins.result), _first_dtype(ins.result))
+        c._op_bytes(op, _merge_maps(_bytes_map(ins.result), arg_bmap))
 
 
 def normalize_cost_analysis(ca) -> Dict[str, float]:
@@ -436,7 +523,29 @@ def analyze(hlo_text: str) -> Dict[str, object]:
     cost = HloCostModel(hlo_text).cost()
     return {
         "flops": cost.flops,
+        "mac_flops": cost.mac_flops,
         "bytes": cost.bytes,
+        "flops_by_dtype": dict(cost.flops_by_dtype),
+        "bytes_by_dtype": dict(cost.bytes_by_dtype),
         "collective_bytes": cost.coll_bytes,
         "collectives": {k: dict(v) for k, v in cost.coll.items()},
     }
+
+
+def entry_param_bytes_by_dtype(hlo_text: str) -> Dict[str, float]:
+    """Bytes of the ENTRY computation's parameters, split by dtype.
+
+    For a decode-stage program the entry parameters are exactly (params,
+    decode state), so the posit-packed KV code buffers show up here as
+    the program's ``u8``/``u16`` share — the cross-check that the energy
+    model's KV-traffic attribution matches the engine's
+    ``kv_cache_bytes`` accounting (``tests/test_energy.py``)."""
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    out: Dict[str, float] = {}
+    for ins in comps[entry].instrs:
+        if ins.op == "parameter":
+            for dt, v in _bytes_map(ins.result).items():
+                out[dt] = out.get(dt, 0.0) + v
+    return out

@@ -24,6 +24,16 @@ dispatch/device-sync, orchestrator loop segments and the detokenizer
 thread; a per-stage wall-clock breakdown table is printed at exit.
 ``--metrics-json metrics.json`` dumps the full metrics-registry
 snapshot (counters, gauges, latency histograms with p50/p95/p99).
+
+``--energy`` prints the modeled energy breakdown (``repro.obs.energy``):
+each compiled engine stage costed by loop-aware HLO analysis, priced
+with the paper's TALU per-MAC PDP row and a documented DRAM pJ/byte,
+times the live per-stage call counters — joules total, uJ/token and the
+per-stage precision mix.  ``--request-log requests.jsonl`` (async mode)
+appends one JSON line per finished/rejected request with its full
+lifecycle decomposition (queue wait / prefill / insert / decode), and
+``--ttft-slo`` / ``--itl-slo`` (milliseconds) arm SLO-violation
+counters in the registry.
 """
 from __future__ import annotations
 
@@ -94,6 +104,19 @@ def main():
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the metrics-registry snapshot (counters, "
                          "gauges, latency histograms) on exit")
+    ap.add_argument("--energy", action="store_true",
+                    help="print the modeled energy breakdown on exit "
+                         "(TALU pJ/MAC x HLO FLOPs + DRAM pJ/byte x HBM "
+                         "bytes, per stage call)")
+    ap.add_argument("--request-log", default=None, metavar="PATH",
+                    help="append one JSON line per terminal request with "
+                         "its lifecycle decomposition (queue wait / "
+                         "prefill / insert / decode)")
+    ap.add_argument("--ttft-slo", type=float, default=None, metavar="MS",
+                    help="TTFT SLO threshold in ms; violations counted "
+                         "in the metrics registry (orch.slo.*)")
+    ap.add_argument("--itl-slo", type=float, default=None, metavar="MS",
+                    help="inter-token latency SLO threshold in ms")
     args = ap.parse_args()
 
     if args.speculative and args.temperature > 0:
@@ -136,6 +159,13 @@ def main():
               f"target steps/token={spt:.2f}")
     print("stats:", {k: (round(v, 2) if isinstance(v, float) else v)
                      for k, v in stats.items()})
+    if args.request_log:    # sync path: dump the engine's own stamps
+        with open(args.request_log, "a") as f:
+            for r in reqs:
+                f.write(json.dumps({"uid": r.uid, "error": r.error,
+                                    "n_tokens": len(r.out_tokens),
+                                    "lifecycle": r.timing}) + "\n")
+        print(f"request log -> {args.request_log}")
     _write_obs(engine, wall, args)
 
 
@@ -149,6 +179,9 @@ def _write_obs(engine, wall_s, args):
         with open(args.metrics_json, "w") as f:
             json.dump(engine.metrics.snapshot(), f, indent=1)
         print(f"metrics snapshot -> {args.metrics_json}")
+    if args.energy:
+        from ..obs import EnergyAccountant, format_energy
+        print(format_energy(EnergyAccountant(engine).breakdown()))
 
 
 def _serve_async(engine, cfg, rng, args):
@@ -156,9 +189,13 @@ def _serve_async(engine, cfg, rng, args):
 
     from ..serve.orchestrator import (Orchestrator, OrchestratorConfig,
                                       StreamingRequest)
+    ms = lambda v: v * 1e-3 if v is not None else None
     ocfg = OrchestratorConfig(max_queue=args.max_queue,
                               admission_timeout_s=args.admission_timeout,
-                              detokenize=False)
+                              detokenize=False,
+                              ttft_slo_s=ms(args.ttft_slo),
+                              itl_slo_s=ms(args.itl_slo),
+                              request_log=args.request_log)
     sreqs = [StreamingRequest(
         rng.integers(0, cfg.vocab, rng.integers(4, 17)).tolist(),
         max_new=args.max_new) for _ in range(args.requests)]
@@ -186,6 +223,13 @@ def _serve_async(engine, cfg, rng, args):
     print("orchestrator:", dict(orch.stats), "| engine:",
           {k: (round(v, 2) if isinstance(v, float) else v)
            for k, v in engine.stats.items()})
+    if args.ttft_slo is not None or args.itl_slo is not None:
+        c = engine.metrics.snapshot()["counters"]
+        print("SLO:", {k: int(c.get(f"orch.slo.{k}", 0))
+                       for k in ("ttft_violations", "ttft_total",
+                                 "itl_violations", "itl_total")})
+    if args.request_log:
+        print(f"request log -> {args.request_log}")
     _write_obs(engine, wall, args)
 
 

@@ -1,0 +1,346 @@
+"""Energy-per-token accounting for the serving engine stages.
+
+The paper's headline claims are *energy* numbers (54.6x power, 1.98x
+vector energy efficiency), so the serving telemetry must report
+joules/token next to tok/s — this module closes that gap without any
+power instrumentation, as a *model*:
+
+1. **Static pJ-per-invocation table.**  Every jitted engine stage
+   (prefill / insert / generate / verify / rollback, plus the ``draft.``
+   speculative stages) records its first-seen abstract arg spec in
+   ``TransprecisionEngine.stage_specs``.  The accountant re-lowers the
+   stage from that spec, runs the loop-aware HLO cost analysis
+   (:mod:`repro.launch.hlo_cost`) on the compiled program for FLOPs and
+   HBM bytes split by dtype, and prices them:
+
+   * **compute** — MACs (dot/conv FLOPs / 2, the ``mac_flops`` split of
+     the cost analysis) times a per-MAC PDP from the paper's TALU row
+     (:func:`benchmarks.hwmodel.pj_per_mac`: 38.9/43.44/46.15 pJ at
+     8/16/32 bit), weighted by the stage's *format mix* — the fraction
+     of MAC work each ``TCPolicy`` role format carries, estimated from
+     the weight-leaf element counts in the stage spec (matmul FLOPs are
+     proportional to weight size x batch).  Deliberately NOT total
+     FLOPs: the compiled program fake-quantizes weights in-graph (QAT
+     emulation), and those elementwise decode flops — up to 10x the
+     real MACs for posit-packed weights — are work the transprecision
+     ALU performs natively inside its MAC datapath, already covered by
+     the PDP constant.  Vector ops (softmax, norms) are second-order
+     and likewise not priced;
+   * **memory** — modeled off-chip traffic times :data:`benchmarks
+     .hwmodel.DRAM_PJ_PER_BYTE`: the stage's ENTRY parameter bytes
+     (weights + decode state + activations in, i.e. one fetch per
+     invocation — a weight-stationary refinement is a knob, not a
+     different model), with the weight buffers re-priced at their
+     *policy storage width*: the program reads f32 weights and
+     fake-quantizes in-graph, but the modeled edge deployment stores
+     them packed (``core.quant``), so a posit8-weight stage fetches
+     bits/32 of the f32 bytes.  Posit-packed KV code buffers need no
+     such adjustment — they are physically ``u8``/``u16`` program
+     inputs and show up at their true width (cross-checked against
+     ``kv_cache_bytes`` in ``tests/test_energy.py``).  Fusion-boundary
+     HBM bytes from the HLO analysis are reported per stage
+     (``hbm_bytes``) for reference but are not DRAM-priced: fusion
+     intermediates live in on-chip SRAM, and the QAT emulation inflates
+     them with decoded-weight buffers the edge device never writes.
+
+2. **Live multipliers.**  The metrics registry counts every stage
+   invocation (``stage.<name>.calls``, always on); joules are the static
+   table times those counters, so windowed readings (per bench load
+   point) are just counter deltas.
+
+The table is deterministic: same config + policy + shapes -> same HLO ->
+same pJ (asserted in tests), and it is memoized process-wide so a bench
+sweep prices each distinct stage program once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.formats import get as get_format
+from ..core.transprecision import _ROLE_BY_NAME
+from ..launch.hlo_cost import analyze, entry_param_bytes_by_dtype
+
+try:                      # benchmarks/ is a sibling of src/ on sys.path
+    from benchmarks.hwmodel import DRAM_PJ_PER_BYTE, pj_per_mac
+except ImportError:       # pragma: no cover - installed-package layout
+    DRAM_PJ_PER_BYTE = 20.0
+    _TALU_PDP_PJ = (38.9, 43.44, 46.15)   # paper Table IV (pinned to
+                                          # hwmodel in tests/test_energy)
+
+    def pj_per_mac(bits: int) -> float:
+        return _TALU_PDP_PJ[0 if bits <= 8 else 1 if bits <= 16 else 2]
+
+__all__ = ["StageEnergy", "EnergyAccountant", "format_energy"]
+
+# weight-leaf name -> policy role, extended with the embedding/readout
+# leaves pack_params leaves alone (they still burn MACs in the logits
+# matmul, at the embed_weights role's format)
+_ENERGY_ROLE_BY_NAME = dict(_ROLE_BY_NAME,
+                            embed="embed_weights", lm_head="embed_weights")
+
+
+@dataclasses.dataclass
+class StageEnergy:
+    """Static per-invocation energy of one compiled engine stage."""
+    stage: str
+    flops: float                # total HLO flops (incl. QAT emulation)
+    mac_flops: float            # dot/conv share: the priced MACs
+    hbm_bytes: float            # fusion-boundary HLO bytes (reference)
+    model_bytes: float          # DRAM-priced: entry params, packed wts
+    bytes_by_dtype: Dict[str, float]
+    param_bytes_by_dtype: Dict[str, float]
+    mac_mix: Dict[str, Dict[str, float]]   # fmt -> {bits, frac}
+    pj_compute: float
+    pj_memory: float
+
+    @property
+    def pj_total(self) -> float:
+        return self.pj_compute + self.pj_memory
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "flops": self.flops,
+            "mac_flops": self.mac_flops,
+            "hbm_bytes": self.hbm_bytes,
+            "model_bytes": self.model_bytes,
+            "bytes_by_dtype": {k: v for k, v in
+                               sorted(self.bytes_by_dtype.items())},
+            "mac_mix": {k: {"bits": int(v["bits"]),
+                            "frac": round(v["frac"], 4)}
+                        for k, v in sorted(self.mac_mix.items())},
+            "pj_compute": self.pj_compute,
+            "pj_memory": self.pj_memory,
+            "pj_per_call": self.pj_total,
+        }
+
+
+def _leaf_name(kp) -> Optional[str]:
+    for k in reversed(kp):
+        key = str(getattr(k, "key", getattr(k, "idx", k)))
+        if not key.isdigit():
+            return key
+    return None
+
+
+def _weight_info(spec, policy) -> Tuple[Dict[str, Dict[str, float]],
+                                        float, float]:
+    """(mac_mix, full_weight_bytes, packed_weight_bytes) from a stage's
+    abstract arg spec: weight leaves classified by name -> policy role ->
+    format; MAC share per format estimated by element count."""
+    weights: List[Tuple[str, Any]] = []
+
+    def visit(kp, leaf):
+        if not hasattr(leaf, "shape") or getattr(leaf, "ndim", 0) < 2:
+            return
+        name = _leaf_name(kp)
+        role = _ENERGY_ROLE_BY_NAME.get(name)
+        if role is not None:
+            weights.append((role, leaf))
+
+    jax.tree_util.tree_map_with_path(visit, spec)
+    by_fmt: Dict[str, Dict[str, float]] = {}
+    w_full = w_packed = 0.0
+    total_elems = 0.0
+    for role, leaf in weights:
+        elems = float(np.prod(leaf.shape))
+        itemsize = np.dtype(leaf.dtype).itemsize
+        fmt = policy.fmt_for(role)
+        if fmt is None:
+            bits = itemsize * 8
+            label = {2: "bf16", 4: "f32"}.get(itemsize, f"int{bits}")
+        else:
+            bits = get_format(fmt).bits
+            label = fmt
+        rec = by_fmt.setdefault(label, {"bits": float(bits), "elems": 0.0})
+        rec["elems"] += elems
+        total_elems += elems
+        w_full += elems * itemsize
+        w_packed += elems * bits / 8.0
+    mix = {}
+    for label, rec in by_fmt.items():
+        mix[label] = {"bits": rec["bits"],
+                      "frac": rec["elems"] / max(total_elems, 1.0)}
+    return mix, w_full, w_packed
+
+
+# process-wide memo of the expensive half (lower + compile + parse),
+# keyed by everything that determines the stage's compiled program
+_COST_CACHE: Dict[str, Dict[str, Any]] = {}
+
+
+def _spec_key(cfg, policy, stage: str, spec) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    sig = ";".join(
+        f"{getattr(l, 'dtype', '')}/{getattr(l, 'shape', l)}"
+        for l in leaves)
+    return f"{getattr(cfg, 'name', cfg)}|{policy.name}|{stage}|" \
+           f"{treedef}|{sig}"
+
+
+def _stage_cost(cfg, policy, stage: str, fn, spec) -> Dict[str, Any]:
+    key = _spec_key(cfg, policy, stage, spec)
+    cached = _COST_CACHE.get(key)
+    if cached is None:
+        txt = fn.lower(*spec).compile().as_text()
+        cached = _COST_CACHE[key] = {
+            "analysis": analyze(txt),
+            "param_bytes": entry_param_bytes_by_dtype(txt)}
+    return cached
+
+
+class EnergyAccountant:
+    """Joules accounting over a serving driver's engine stages.
+
+    ``driver`` is a ``ServingEngine`` / ``SpeculativeEngine`` (stages
+    found via ``.engine`` and ``.draft_engine``) or a bare
+    ``TransprecisionEngine``.  The pJ table is built lazily on first
+    use from whatever stages have run by then; per-window joules come
+    from ``calls_snapshot()`` deltas.
+    """
+
+    def __init__(self, driver, *,
+                 dram_pj_per_byte: float = DRAM_PJ_PER_BYTE):
+        self.driver = driver
+        self.metrics = getattr(driver, "metrics", None)
+        self.dram_pj_per_byte = float(dram_pj_per_byte)
+        self._table: Dict[str, StageEnergy] = {}
+        self._errors: Dict[str, str] = {}
+
+    def _engines(self) -> List[Any]:
+        if hasattr(self.driver, "stage_specs"):
+            return [self.driver]
+        out = [self.driver.engine]
+        draft = getattr(self.driver, "draft_engine", None)
+        if draft is not None:
+            out.append(draft)
+        return out
+
+    # ---- static table ----
+    def table(self) -> Dict[str, StageEnergy]:
+        """pJ-per-invocation per stage name (lazily built, memoized)."""
+        for eng in self._engines():
+            for name, (fn, spec) in list(eng.stage_specs.items()):
+                if name in self._table or name in self._errors:
+                    continue
+                try:
+                    self._table[name] = self._price_stage(eng, name, fn,
+                                                          spec)
+                except Exception as e:   # never fail serving over a cost
+                    self._errors[name] = f"{type(e).__name__}: {e}"
+        return self._table
+
+    def _price_stage(self, eng, name: str, fn, spec) -> StageEnergy:
+        cost = _stage_cost(eng.cfg, eng.policy, name, fn, spec)
+        ana = cost["analysis"]
+        flops, hbm = float(ana["flops"]), float(ana["bytes"])
+        macs = float(ana["mac_flops"]) / 2.0
+        mix, w_full, w_packed = _weight_info(spec, eng.policy)
+        if mix:
+            pj_mac = sum(v["frac"] * pj_per_mac(int(v["bits"]))
+                         for v in mix.values())
+        else:                       # no MAC weights (insert/rollback):
+            pj_mac = pj_per_mac(32)  # stray MACs priced at full width
+        # DRAM-priced traffic: one fetch of every entry parameter per
+        # invocation, weights re-priced from the program's f32 to the
+        # policy's packed storage width; floored at the packed bytes so
+        # the adjustment can never go negative
+        param_bytes = float(sum(cost["param_bytes"].values()))
+        model_bytes = (max(param_bytes - w_full + w_packed, w_packed)
+                       if w_full > 0 else param_bytes)
+        return StageEnergy(
+            stage=name, flops=flops, mac_flops=float(ana["mac_flops"]),
+            hbm_bytes=hbm, model_bytes=model_bytes,
+            bytes_by_dtype=dict(ana["bytes_by_dtype"]),
+            param_bytes_by_dtype=dict(cost["param_bytes"]),
+            mac_mix=mix,
+            pj_compute=macs * pj_mac,
+            pj_memory=model_bytes * self.dram_pj_per_byte)
+
+    # ---- live multipliers ----
+    def calls_snapshot(self) -> Dict[str, int]:
+        """Current per-stage invocation counts from the registry."""
+        if self.metrics is None:
+            return {}
+        counters = self.metrics.snapshot()["counters"]
+        out = {}
+        for cname, v in counters.items():
+            if cname.startswith("stage.") and cname.endswith(".calls"):
+                out[cname[len("stage."):-len(".calls")]] = int(v)
+        return out
+
+    @staticmethod
+    def calls_delta(now: Dict[str, int],
+                    before: Dict[str, int]) -> Dict[str, int]:
+        return {k: v - before.get(k, 0) for k, v in now.items()
+                if v - before.get(k, 0) > 0}
+
+    def _tokens_now(self) -> int:
+        if self.metrics is None:
+            return 0
+        return int(self.metrics.snapshot()["counters"]
+                   .get("engine.tokens", 0))
+
+    # ---- joules ----
+    def breakdown(self, *, calls: Optional[Dict[str, int]] = None,
+                  tokens: Optional[int] = None) -> Dict[str, Any]:
+        """Joules attribution: cumulative by default, windowed when
+        ``calls`` (a :meth:`calls_delta`) and ``tokens`` are given.
+        Cumulative calls also publish ``energy.joules_total`` /
+        ``energy.joules_per_token`` gauges to the registry."""
+        cumulative = calls is None
+        if calls is None:
+            calls = self.calls_snapshot()
+        if tokens is None:
+            tokens = self._tokens_now()
+        table = self.table()
+        stages: Dict[str, Any] = {}
+        joules = 0.0
+        for name, e in sorted(table.items()):
+            n = int(calls.get(name, 0))
+            j = n * e.pj_total * 1e-12
+            joules += j
+            stages[name] = {**e.as_dict(), "calls": n, "joules": j}
+        jpt = joules / tokens if tokens else None
+        out = {"joules_total": joules,
+               "tokens": int(tokens),
+               "joules_per_token": jpt,
+               "tok_per_joule": tokens / joules if joules > 0 else None,
+               "model": {"mac_pdp": "TALU Table IV "
+                                    "(benchmarks/hwmodel.py pj_per_mac)",
+                         "dram_pj_per_byte": self.dram_pj_per_byte},
+               "stages": stages}
+        if self._errors:
+            out["errors"] = dict(self._errors)
+        if cumulative and self.metrics is not None:
+            self.metrics.gauge("energy.joules_total").set(joules)
+            if jpt is not None:
+                self.metrics.gauge("energy.joules_per_token").set(jpt)
+        return out
+
+
+def format_energy(bd: Dict[str, Any]) -> str:
+    """Human-readable table of a :meth:`EnergyAccountant.breakdown`."""
+    lines = []
+    jpt = bd["joules_per_token"]
+    tpj = bd["tok_per_joule"]
+    head = f"energy: {bd['joules_total'] * 1e3:.3f} mJ over " \
+           f"{bd['tokens']} tokens"
+    if jpt is not None:
+        head += f" -> {jpt * 1e6:.1f} uJ/token ({tpj:.0f} tok/J)"
+    lines.append(head)
+    lines.append(f"  {'stage':<16s} {'calls':>7s} {'uJ/call':>9s} "
+                 f"{'compute%':>9s}  mac mix")
+    for name, s in bd["stages"].items():
+        tot = s["pj_per_call"]
+        comp = 100.0 * s["pj_compute"] / tot if tot else 0.0
+        mix = " ".join(f"{k}:{v['frac']:.2f}"
+                       for k, v in s["mac_mix"].items()) or "-"
+        lines.append(f"  {name:<16s} {s['calls']:>7d} "
+                     f"{tot * 1e-6:>9.2f} {comp:>8.1f}%  {mix}")
+    for name, err in bd.get("errors", {}).items():
+        lines.append(f"  {name:<16s} (not priced: {err})")
+    return "\n".join(lines)

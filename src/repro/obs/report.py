@@ -23,6 +23,11 @@ from typing import Any, Dict, Optional
 # span categories whose work overlaps the scheduler thread rather than
 # partitioning it (reported, but excluded from the attribution sum)
 CONCURRENT_CATS = ("detok",)
+# per-request wait categories: a request queue-waiting overlaps other
+# requests' decode wall time, so the bucket is reported on its own
+# (summable against per-request admit-submit stamps) but never added to
+# the attribution sum — it would double-count the decode work it overlaps
+QUEUE_CATS = ("queue",)
 
 __all__ = ["stage_breakdown", "format_breakdown"]
 
@@ -59,13 +64,21 @@ def stage_breakdown(tracer, wall_s: float, *,
 
         {"wall_s": ..., "stages": {stage: {"dispatch_s", "device_s",
          "calls"}}, "host": {bucket: seconds}, "concurrent": {...},
+         "queue": {span: {"total_s", "count"}},
          "attributed_s": ..., "unattributed_s": ...,
          "attributed_frac": ...}
+
+    ``queue`` holds per-request wait spans (``cat="queue"``, recorded by
+    the engine from submit→admit stamps): summed seconds and span count
+    per name, outside the attribution sum — N queued requests wait
+    concurrently with each other and with the decode work the other
+    buckets already cover, so adding them would overcount the wall.
     """
     agg = _sub(tracer.self_times(), since)
     stages: Dict[str, Dict[str, float]] = {}
     host: Dict[str, float] = {}
     concurrent: Dict[str, float] = {}
+    queue: Dict[str, Dict[str, float]] = {}
     attributed = 0.0
     for name, rec in agg.items():
         if rec["cat"] == "engine":
@@ -78,6 +91,10 @@ def stage_breakdown(tracer, wall_s: float, *,
             else:
                 s["device_s"] += rec["self_s"]
             attributed += rec["self_s"]
+        elif rec["cat"] in QUEUE_CATS:
+            q = queue.setdefault(name, {"total_s": 0.0, "count": 0})
+            q["total_s"] += rec["total_s"]
+            q["count"] += rec["count"]
         elif rec["cat"] in CONCURRENT_CATS:
             concurrent[name] = concurrent.get(name, 0.0) + rec["self_s"]
         else:
@@ -94,6 +111,8 @@ def stage_breakdown(tracer, wall_s: float, *,
                        for k, v in sorted(stages.items())},
             "host": dict(sorted(host.items())),
             "concurrent": dict(sorted(concurrent.items())),
+            "queue": {k: {"total_s": v["total_s"], "count": int(v["count"])}
+                      for k, v in sorted(queue.items())},
             "attributed_s": attributed,
             "unattributed_s": unattributed,
             "attributed_frac": min(attributed / wall_s, 1.0)}
@@ -114,6 +133,9 @@ def format_breakdown(bd: Dict[str, Any]) -> str:
                      f"{100 * v / wall:>6.1f}%")
     for name, v in bd["concurrent"].items():
         lines.append(f"{name + ' (conc.)':<22s} {v * 1e3:>8.1f}ms")
+    for name, q in bd.get("queue", {}).items():
+        lines.append(f"{name + ' (queue)':<22s} {q['total_s'] * 1e3:>8.1f}ms"
+                     f" {'':>10s} {q['count']:>7d}")
     lines.append(f"{'(unattributed)':<22s} "
                  f"{bd['unattributed_s'] * 1e3:>8.1f}ms {'':>10s} {'':>7s} "
                  f"{100 * bd['unattributed_s'] / wall:>6.1f}%")

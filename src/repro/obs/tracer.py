@@ -138,6 +138,33 @@ class Tracer:
             return wrapper
         return deco
 
+    def record(self, name: str, t0: float, t1: float, cat: str = "host",
+               **args) -> None:
+        """Record an already-closed span from external ``perf_counter``
+        stamps (e.g. a request's queue wait measured between its submit
+        and admit stamps).  No stack interaction: the span never nests,
+        so its self time equals its duration, and — unlike ``span()`` —
+        it does not subtract from any live parent span.  Use ``cat`` to
+        pick the attribution bucket (``"queue"`` spans are reported
+        outside the wall-clock sum: a request waiting overlaps other
+        requests decoding)."""
+        if not self.enabled:
+            return
+        dur = t1 - t0
+        tid = threading.get_ident()
+        t = threading.current_thread()
+        key = (name, cat)
+        with self._lock:
+            self._threads.setdefault(tid, t.name)
+            self._ring.append((name, cat, tid, t0, t1, args or None))
+            agg = self._agg.get(key)
+            if agg is None:
+                self._agg[key] = [1, dur, dur]
+            else:
+                agg[0] += 1
+                agg[1] += dur
+                agg[2] += dur
+
     def _stack(self) -> List[Span]:
         stack = getattr(self._tls, "stack", None)
         if stack is None:

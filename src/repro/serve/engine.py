@@ -103,6 +103,12 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     error: Optional[str] = None  # set when the request is rejected
+    # lifecycle stamps (``time.perf_counter()``): submit, admit,
+    # prefill_done, insert_done, first_token, finish.  Stamped with
+    # ``setdefault`` so readmission after a page-pool eviction keeps the
+    # request's ORIGINAL stamps — TTFT means first token ever streamed.
+    timing: Dict[str, float] = dataclasses.field(
+        default_factory=dict, repr=False)
     # recompute-on-readmit state for a page-pool eviction: the token
     # sequence (prompt + all-but-last emitted) the readmission prefills
     _resume: Optional[np.ndarray] = dataclasses.field(
@@ -303,6 +309,7 @@ class ServingEngine:
             dst[:n] = dst_rows
         self.cache = self.engine.insert(prefix, self.cache, slot, row,
                                         dst_rows=dst)
+        req.timing.setdefault("insert_done", time.perf_counter())
         self.stats["prefills"] += 1
         if req._resume is not None:
             # recompute-on-readmit: the stream already holds every token
@@ -347,6 +354,14 @@ class ServingEngine:
             ok[j] = True
         if not admitted:
             return ok
+        now = time.perf_counter()
+        for req, _, _, _ in admitted:
+            sub = req.timing.setdefault("submit", now)
+            if "admit" not in req.timing:   # first admission only: a
+                req.timing["admit"] = now   # readmit isn't a queue wait
+                if self.tracer.enabled and now > sub:
+                    self.tracer.record("queue.wait", sub, now, cat="queue",
+                                       uid=req.uid)
         if self.engine.bucketed:
             bucket = self.engine.bucket_for(max(len(toks[j])
                                                 for _, _, _, j in admitted))
@@ -360,7 +375,9 @@ class ServingEngine:
             (_, _, _, j0) = admitted[0]
             prefix = self.engine.prefill(
                 self.params, np.asarray(toks[j0], np.int32)[None])
+        done = time.perf_counter()
         for row, (req, slot, dst_rows, _) in enumerate(admitted):
+            req.timing.setdefault("prefill_done", done)
             self._install(req, slot, dst_rows, prefix, row)
         return ok
 
@@ -378,6 +395,10 @@ class ServingEngine:
     def _free_request_slot(self, slot: int) -> None:
         """Release a finished request's slot (paged: return its pages to
         the allocator immediately and point the slot at the trash page)."""
+        req = self.slot_req[slot]
+        if req is not None and req.done:    # eviction frees too, but an
+            req.timing.setdefault(          # evicted request isn't done
+                "finish", time.perf_counter())
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0
         if self.paged:
@@ -472,6 +493,8 @@ class ServingEngine:
     def _emit(self, req: Request, toks: List[int]) -> None:
         """Append newly decoded tokens to ``req`` and stream them through
         the ``on_emit`` hook."""
+        if toks:
+            req.timing.setdefault("first_token", time.perf_counter())
         req.out_tokens.extend(toks)
         self.stats["tokens"] += len(toks)
         if self.on_emit is not None:
@@ -540,6 +563,9 @@ class ServingEngine:
             if reject is not None:
                 req.done = True
                 req.error = reject
+                now = time.perf_counter()
+                req.timing.setdefault("submit", now)
+                req.timing.setdefault("finish", now)
                 self.stats["rejected"] += 1
                 queue.pop(i)
                 continue
@@ -555,6 +581,8 @@ class ServingEngine:
         tracer/orchestrator stamps) — never ``time.time()``."""
         queue = list(requests)
         t0 = time.perf_counter()
+        for r in queue:                 # sync path: batch entry == submit
+            r.timing.setdefault("submit", t0)
         ticks = 0
         while (queue or self._evicted
                or any(r is not None for r in self.slot_req)) \

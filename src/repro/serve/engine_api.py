@@ -164,6 +164,17 @@ def rollback_paged_cache(cache, new_pos, scrub_rows):
     return new_cache
 
 
+def _abstract_args(args):
+    """Arg pytree with arrays replaced by ``jax.ShapeDtypeStruct`` —
+    static python scalars (jit ``static_argnums``) pass through.  The
+    energy accountant (``repro.obs.energy``) re-lowers a stage from this
+    spec to cost its compiled program without holding live buffers."""
+    return jax.tree_util.tree_map(
+        lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                   if hasattr(x, "shape") and hasattr(x, "dtype") else x),
+        args)
+
+
 def _slot_update(dst, src, slot):
     """Write the single-row ``src`` into ``dst`` at batch index ``slot``.
     The batch axis is the first axis where the sizes differ; identical
@@ -235,6 +246,14 @@ class TransprecisionEngine:
         self._insert_jits: Dict[Any, Any] = {}
         self._verify_jits: Dict[int, Any] = {}
         self._rb_ring_jits: Dict[int, Any] = {}
+        # always-on per-stage invocation counters ("stage.<name>.calls" in
+        # the registry — the live multiplier of the energy model's static
+        # pJ/invocation table) and the first-seen abstract arg spec per
+        # stage, from which the energy accountant lowers + costs the
+        # stage's compiled program.  Both are cheap on the hot path: one
+        # dict hit + counter inc per stage call, spec capture only once.
+        self._call_counters: Dict[str, Any] = {}
+        self.stage_specs: Dict[str, Any] = {}
         self._generate_jit = jax.jit(
             self._generate_impl,
             donate_argnums=(1,) if self._donate else ())
@@ -250,10 +269,18 @@ class TransprecisionEngine:
         covers the ``block_until_ready`` wait for the stage's outputs.
         With no enabled tracer this is a plain call — no sync, no
         stamps — so tracing-off serving keeps XLA's async dispatch."""
+        name = self.stage_prefix + stage
+        if self.metrics is not None:
+            ctr = self._call_counters.get(name)
+            if ctr is None:
+                ctr = self._call_counters[name] = self.metrics.counter(
+                    f"stage.{name}.calls")
+            ctr.inc()
+        if name not in self.stage_specs:
+            self.stage_specs[name] = (fn, _abstract_args(args))
         tr = self.tracer
         if tr is None or not tr.enabled:
             return fn(*args)
-        name = self.stage_prefix + stage
         t0 = perf_counter()
         with jax.profiler.TraceAnnotation(name):
             with tr.span(name + ".dispatch", cat="engine"):

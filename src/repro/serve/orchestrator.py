@@ -43,6 +43,7 @@ the detokenizer thread and must not call back into the orchestrator
 from __future__ import annotations
 
 import dataclasses
+import json
 import queue
 import threading
 import time
@@ -70,12 +71,24 @@ class OrchestratorConfig:
     poll_interval_s: scheduler sleep when there is nothing to do.
     detokenize: decode emitted tokens to text on the detokenizer thread
         (False streams token ids only; text fields stay empty).
+    ttft_slo_s / itl_slo_s: latency SLO thresholds.  When set, every
+        finished request's TTFT (and every inter-token gap) is checked
+        against them and ``orch.slo.ttft_violations`` /
+        ``orch.slo.itl_violations`` counters tick next to the matching
+        ``*_total`` denominators.
+    request_log: path of a JSONL file appended one line per terminal
+        request (finished or rejected): uid, token count, error, TTFT
+        and the full lifecycle decomposition (queue wait / prefill /
+        insert / decode seconds from the engine's per-request stamps).
     """
     max_queue: int = 64
     admission_timeout_s: float = float("inf")
     batch_window_s: float = 0.0
     poll_interval_s: float = 0.001
     detokenize: bool = True
+    ttft_slo_s: Optional[float] = None
+    itl_slo_s: Optional[float] = None
+    request_log: Optional[str] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -119,6 +132,37 @@ class StreamingRequest:
     def itl_s(self) -> List[float]:
         """Inter-token gaps (speculative batches share one stamp → 0s)."""
         return [b - a for a, b in zip(self.token_t, self.token_t[1:])]
+
+    def lifecycle(self) -> Dict[str, float]:
+        """The engine's per-request ``perf_counter`` stamps, in lifecycle
+        order (submit → admit → prefill_done → insert_done → first_token
+        → finish).  Rejected requests carry only submit + finish; keys a
+        request never reached are absent."""
+        timing = self._req.timing if self._req is not None else {}
+        order = ("submit", "admit", "prefill_done", "insert_done",
+                 "first_token", "finish")
+        return {k: timing[k] for k in order if k in timing}
+
+    def lifecycle_deltas(self) -> Dict[str, float]:
+        """TTFT decomposition in seconds relative to submit: queue wait
+        (submit→admit), prefill (admit→prefill_done), insert
+        (prefill_done→insert_done plus first-token sampling up to
+        first_token), decode (first_token→finish), total."""
+        t = self.lifecycle()
+        out: Dict[str, float] = {}
+        if "admit" in t:
+            out["queue_wait_s"] = t["admit"] - t["submit"]
+        if "prefill_done" in t and "admit" in t:
+            out["prefill_s"] = t["prefill_done"] - t["admit"]
+        if "insert_done" in t and "prefill_done" in t:
+            out["insert_s"] = t["insert_done"] - t["prefill_done"]
+        if "first_token" in t:
+            out["ttft_s"] = t["first_token"] - t["submit"]
+        if "finish" in t:
+            out["total_s"] = t["finish"] - t["submit"]
+            if "first_token" in t:
+                out["decode_s"] = t["finish"] - t["first_token"]
+        return out
 
 
 def _default_tokenize(vocab: int) -> Callable[[str], List[int]]:
@@ -171,6 +215,17 @@ class Orchestrator:
         self.stats.bind_counters("submitted", "finished", "rejected",
                                  "admission_timeouts")
         self._queue_depth = self.metrics.gauge("orch.queue_depth")
+        # lifecycle latency distributions + SLO accounting (scheduler
+        # thread only; Histogram.observe is locked anyway)
+        self._h_ttft = self.metrics.histogram("orch.ttft_s")
+        self._h_itl = self.metrics.histogram("orch.itl_s")
+        self._h_qwait = self.metrics.histogram("orch.queue_wait_s")
+        self._slo = {k: self.metrics.counter(f"orch.slo.{k}")
+                     for k in ("ttft_total", "ttft_violations",
+                               "itl_total", "itl_violations")}
+        self._reqlog = (open(ocfg.request_log, "a")
+                        if ocfg.request_log else None)
+        self._reqlog_lock = threading.Lock()
 
         engine.on_emit = self._on_emit       # runs on the scheduler thread
         self._sched = threading.Thread(target=self._scheduler_loop,
@@ -213,9 +268,36 @@ class Orchestrator:
     def _finish(self, sreq: StreamingRequest, error: Optional[str] = None):
         sreq.error = error
         sreq.finish_t = time.perf_counter()
+        if sreq._req is not None:
+            # rejects the orchestrator filters itself never reach the
+            # engine's stamping paths; backfill the terminal stamps so
+            # every terminal request has submit+finish
+            sreq._req.timing.setdefault("submit", sreq.submit_t)
+            sreq._req.timing.setdefault("finish", sreq.finish_t)
+        self._observe_slo(sreq)
         self.stats["rejected" if error else "finished"] += 1
         self._stream_q.put(("done", sreq))
         self._slots.release()
+
+    def _observe_slo(self, sreq: StreamingRequest) -> None:
+        """Latency histograms + SLO violation counters for one terminal
+        request (scheduler thread)."""
+        d = sreq.lifecycle_deltas()
+        if "queue_wait_s" in d:
+            self._h_qwait.observe(d["queue_wait_s"])
+        ttft = sreq.ttft_s
+        if ttft is not None:
+            self._h_ttft.observe(ttft)
+            if self.ocfg.ttft_slo_s is not None:
+                self._slo["ttft_total"].inc()
+                if ttft > self.ocfg.ttft_slo_s:
+                    self._slo["ttft_violations"].inc()
+        for gap in sreq.itl_s():
+            self._h_itl.observe(gap)
+            if self.ocfg.itl_slo_s is not None:
+                self._slo["itl_total"].inc()
+                if gap > self.ocfg.itl_slo_s:
+                    self._slo["itl_violations"].inc()
 
     def _scheduler_loop(self) -> None:
         eng, ocfg, tracer = self.engine, self.ocfg, self.tracer
@@ -283,8 +365,12 @@ class Orchestrator:
                 if isinstance(sreq.prompt, str) else
                 [int(t) for t in sreq.prompt])
         self._uid += 1
-        return Request(uid=self._uid, prompt=np.asarray(toks, np.int32),
-                       max_new=sreq.max_new, temperature=sreq.temperature)
+        req = Request(uid=self._uid, prompt=np.asarray(toks, np.int32),
+                      max_new=sreq.max_new, temperature=sreq.temperature)
+        # the engine's lifecycle stamps start from the true submission
+        # time, not the scheduler pull time, so queue wait is end-to-end
+        req.timing["submit"] = sreq.submit_t
+        return req
 
     # ---- detokenizer thread ----
     def _detok_loop(self) -> None:
@@ -293,6 +379,10 @@ class Orchestrator:
             if item[0] == "stop":
                 return
             if item[0] == "done":
+                # log BEFORE _done.set(): close() joins this thread, so a
+                # waiter that saw done=True is guaranteed a flushed line
+                if self._reqlog is not None:
+                    self._write_reqlog(item[1])
                 item[1]._done.set()
                 continue
             _, sreq, toks = item
@@ -307,6 +397,23 @@ class Orchestrator:
                 if sreq.on_token is not None:
                     sreq.on_token(sreq, toks, piece)
 
+    def _write_reqlog(self, sreq: StreamingRequest) -> None:
+        """One JSONL line per terminal request (detokenizer thread)."""
+        uid = sreq._req.uid if sreq._req is not None else None
+        rec = {"uid": uid,
+               "error": sreq.error,
+               "n_prompt": (len(sreq._req.prompt)
+                            if sreq._req is not None else None),
+               "n_tokens": len(sreq._req.out_tokens)
+               if sreq._req is not None else 0,
+               "ttft_s": sreq.ttft_s,
+               "lifecycle": sreq.lifecycle(),
+               "deltas": sreq.lifecycle_deltas()}
+        line = json.dumps(rec) + "\n"
+        with self._reqlog_lock:
+            self._reqlog.write(line)
+            self._reqlog.flush()
+
     # ---- lifecycle ----
     def close(self, timeout: Optional[float] = 60.0) -> None:
         """Drain in-flight work, then stop both threads."""
@@ -316,6 +423,9 @@ class Orchestrator:
         self._stop.set()
         self._sched.join(timeout)
         self._detok.join(timeout)
+        if self._reqlog is not None:
+            with self._reqlog_lock:
+                self._reqlog.close()
 
     def __enter__(self) -> "Orchestrator":
         return self
