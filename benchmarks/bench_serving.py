@@ -81,11 +81,27 @@ def _slo_counters(eng):
                       "itl_total", "itl_violations")}
 
 
+# robustness accounting: injected faults, retried stage dispatches and
+# guard precision-fallback re-decodes over the load window.  All zero on
+# the default fault-free run — the point is that the counters (and their
+# hooks) are present on the hot serving path at no measurable cost.
+_FAULT_KEYS = ("faults.injected", "stage.retries", "stage.retry_exhausted",
+               "guard.nonfinite_rows", "guard.quarantined",
+               "guard.fallbacks", "orch.deadline_expired",
+               "orch.cancelled", "orch.watchdog_fired")
+
+
+def _fault_counters(eng):
+    c = eng.metrics.snapshot()["counters"]
+    return {k: int(c.get(k, 0)) for k in _FAULT_KEYS}
+
+
 def _run_load(eng, prompts, rate_rps, rng, acct=None, request_log=None):
     """Submit N_REQ prompts with Poisson gaps at rate_rps; return metrics."""
     ev0 = eng.stats.get("evictions", 0)
     since = eng.tracer.self_times()
     slo0 = _slo_counters(eng)
+    flt0 = _fault_counters(eng)
     calls0 = acct.calls_snapshot() if acct is not None else {}
     orch = Orchestrator(eng, OrchestratorConfig(max_queue=4 * N_REQ,
                                                 detokenize=False,
@@ -150,6 +166,8 @@ def _run_load(eng, prompts, rate_rps, rng, acct=None, request_log=None):
             "evictions": eng.stats.get("evictions", 0) - ev0,
             "energy": energy,
             "slo": {k: slo1[k] - slo0[k] for k in slo1},
+            "faults": {k: v - flt0[k]
+                       for k, v in _fault_counters(eng).items()},
             "stage_breakdown": bd}
 
 

@@ -16,6 +16,12 @@ if [[ "${1:-}" == "--smoke" ]]; then
   ARGS+=(--ignore=tests/test_system.py)
 fi
 
+# per-test wall-clock cap when pytest-timeout is available (the chaos
+# suite asserts no-hang invariants — a regression should fail, not stall)
+if python -c "import pytest_timeout" 2>/dev/null; then
+  ARGS+=(--timeout=600 --timeout-method=thread)
+fi
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "${ARGS[@]}" "$@"
 
 if [[ "$SMOKE" == 1 ]]; then

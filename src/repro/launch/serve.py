@@ -34,6 +34,17 @@ appends one JSON line per finished/rejected request with its full
 lifecycle decomposition (queue wait / prefill / insert / decode), and
 ``--ttft-slo`` / ``--itl-slo`` (milliseconds) arm SLO-violation
 counters in the registry.
+
+Robustness (``repro.serve.faults`` / ``repro.serve.guard``):
+``--fault-plan random:seed=3,n=6`` arms deterministic seed-driven fault
+injection (stage errors/latency, pool-dry allocs, NaN-poisoned logits,
+crashed workers under ``lethal=1``) together with the hardened
+lifecycle — bounded exponential-backoff stage retries and the numeric
+guard that quarantines non-finite logits and re-decodes the slot up a
+precision-fallback ladder.  ``--deadline-s`` / ``--watchdog-s`` bound
+per-request and scheduler-stall time in async mode, and ``--health``
+prints the orchestrator's health snapshot (thread liveness, in-flight
+depth, fault/guard counters) before exit.
 """
 from __future__ import annotations
 
@@ -117,6 +128,26 @@ def main():
                          "in the metrics registry (orch.slo.*)")
     ap.add_argument("--itl-slo", type=float, default=None, metavar="MS",
                     help="inter-token latency SLO threshold in ms")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="arm deterministic fault injection + the "
+                         "hardened lifecycle (bounded stage retries; "
+                         "numeric guard with precision-fallback re-decode "
+                         "on the base engine).  SPEC is 'none', "
+                         "'random:seed=3,n=6[,rounds=40][,slots=2]"
+                         "[,lethal=1]' or a JSON fault-list file "
+                         "(repro.serve.faults.FaultPlan.parse)")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="S",
+                    help="async: per-request deadline from submit; expiry "
+                         "terminates the stream with error='deadline' and "
+                         "reclaims its slot + pages")
+    ap.add_argument("--watchdog-s", type=float, default=None, metavar="S",
+                    help="async: fail all in-flight requests if the "
+                         "scheduler makes no progress for this long")
+    ap.add_argument("--health", action="store_true",
+                    help="print the orchestrator health snapshot (JSON: "
+                         "liveness, threads, in-flight depth, engine "
+                         "occupancy, faults/guard counters) before exit; "
+                         "sync mode prints the counter subset only")
     args = ap.parse_args()
 
     if args.speculative and args.temperature > 0:
@@ -129,13 +160,24 @@ def main():
                        kv_format=args.kv_format, kv_layout=args.kv_layout,
                        page_size=args.page_size, num_pages=args.num_pages,
                        page_overcommit=args.overcommit)
+    faults = retry = None
+    guard = False
+    if args.fault_plan:
+        from ..serve.faults import FaultPlan, RetryPolicy
+        faults = FaultPlan.parse(args.fault_plan)
+        retry = RetryPolicy()
+        # the numeric guard is a base-engine decode policy (speculative
+        # verify-round quarantine is a ROADMAP follow-on)
+        guard = not args.speculative
     if args.speculative:
         from ..serve.speculative import SpeculativeEngine
         engine = SpeculativeEngine(cfg, params, scfg, policy=args.policy,
                                    gamma=args.gamma,
-                                   draft_kv_format=args.draft_kv_format)
+                                   draft_kv_format=args.draft_kv_format,
+                                   faults=faults, retry=retry)
     else:
-        engine = ServingEngine(cfg, params, scfg, policy=args.policy)
+        engine = ServingEngine(cfg, params, scfg, policy=args.policy,
+                               faults=faults, retry=retry, guard=guard)
     if args.trace_out:
         engine.tracer.enable()
     rng = np.random.default_rng(0)
@@ -166,6 +208,12 @@ def main():
                                     "n_tokens": len(r.out_tokens),
                                     "lifecycle": r.timing}) + "\n")
         print(f"request log -> {args.request_log}")
+    if args.health:    # sync path: no orchestrator, counters only
+        c = engine.metrics.snapshot()["counters"]
+        print("health:", json.dumps(
+            {k: int(v) for k, v in sorted(c.items())
+             if k.startswith(("faults.", "guard."))
+             or k in ("stage.retries", "stage.retry_exhausted")}))
     _write_obs(engine, wall, args)
 
 
@@ -193,6 +241,8 @@ def _serve_async(engine, cfg, rng, args):
     ocfg = OrchestratorConfig(max_queue=args.max_queue,
                               admission_timeout_s=args.admission_timeout,
                               detokenize=False,
+                              deadline_s=args.deadline_s,
+                              watchdog_s=args.watchdog_s,
                               ttft_slo_s=ms(args.ttft_slo),
                               itl_slo_s=ms(args.itl_slo),
                               request_log=args.request_log)
@@ -200,15 +250,42 @@ def _serve_async(engine, cfg, rng, args):
         rng.integers(0, cfg.vocab, rng.integers(4, 17)).tolist(),
         max_new=args.max_new) for _ in range(args.requests)]
     t0 = perf_counter()
-    with Orchestrator(engine, ocfg) as orch:
+    # no `with`: under a lethal fault plan a worker loop may die, and
+    # __exit__ would re-raise its exception — we want to keep going and
+    # report the health snapshot instead
+    orch = Orchestrator(engine, ocfg)
+    submitted = []
+    try:
         for s in sreqs:
-            if not orch.submit(s):
+            try:
+                ok = orch.submit(s)
+            except RuntimeError as e:   # orchestrator went unhealthy
+                print(f"submit refused: {e}")
+                break
+            if not ok:
                 print("request timed out in admission; dropping")
                 continue
+            submitted.append(s)
             if args.rate > 0:
                 time.sleep(float(rng.exponential(1.0 / args.rate)))
-        for s in sreqs:
-            s.wait()
+        # containment guarantees every submitted request reaches a
+        # terminal state, so these waits cannot hang; the timeout is a
+        # belt-and-suspenders bound for the launcher itself
+        for s in submitted:
+            s.wait(timeout=300.0)
+        if args.health:
+            print("health:", json.dumps(orch.health()))
+    finally:
+        try:
+            orch.close()
+        except RuntimeError as e:       # leaked-thread detection
+            print(f"close: {e}")
+    errs = {}
+    for s in submitted:
+        if s.error is not None:
+            errs[s.error] = errs.get(s.error, 0) + 1
+    if errs:
+        print("terminal errors:", errs)
     wall = perf_counter() - t0
     for s in sreqs[:4]:
         print(f"stream: {len(s.out_tokens)} tokens ->",

@@ -4,6 +4,9 @@ from .engine_api import (Prefix, TransprecisionEngine, rollback_paged_cache,
 from .distributed import (distributed_decode_attention,
                           make_distributed_decode_step,
                           make_distributed_engine)
+from .faults import (Fault, FaultInjector, FaultPlan, InjectedFault,
+                     RetryPolicy)
+from .guard import GuardConfig, NumericGuard, fallback_ladder
 from .orchestrator import Orchestrator, OrchestratorConfig, StreamingRequest
 from .paged import PageAllocator, SlotPages, pages_for
 from .speculative import SpeculativeEngine

@@ -57,6 +57,8 @@ from ..core.transprecision import BF16, TCPolicy, get_policy
 from ..models import lm
 from ..obs import MetricsRegistry, StatsView, Tracer
 from .engine_api import TransprecisionEngine
+from .faults import FaultInjector, FaultPlan, RetryPolicy
+from .guard import GuardConfig, NumericGuard
 from .paged import PageAllocator, SlotPages, pages_for
 
 _KV_LEAF_NAMES = ("k", "v", "k_scale", "v_scale", "xk", "xv")
@@ -118,7 +120,9 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
                  policy: TCPolicy = BF16, *, attn_impl=None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 faults=None, retry: Optional[RetryPolicy] = None,
+                 guard=None):
         self.cfg = cfg
         self.scfg = scfg
         self.policy = get_policy(policy)
@@ -128,6 +132,20 @@ class ServingEngine:
         # bounds the disabled overhead)
         self.tracer = tracer if tracer is not None else Tracer()
         self.metrics = MetricsRegistry()
+        # chaos hardening (serve/faults.py, serve/guard.py) — all off by
+        # default, leaving single `is not None` checks on the hot path:
+        #   faults: a FaultPlan or FaultInjector of scheduled failures;
+        #   retry:  bounded-backoff retry of transient stage failures;
+        #   guard:  True or a GuardConfig arms the numeric quarantine +
+        #           precision-fallback re-decode for non-finite logits.
+        if faults is not None and isinstance(faults, FaultPlan):
+            faults = FaultInjector(faults, metrics=self.metrics)
+        self.faults: Optional[FaultInjector] = faults
+        if self.faults is not None and self.faults.metrics is None:
+            self.faults.metrics = self.metrics
+        self.retry = retry
+        self._guard_cfg = (guard if isinstance(guard, GuardConfig)
+                           else (GuardConfig() if guard else None))
         overrides = {}
         if scfg.kv_format is not None:
             overrides["kv_format"] = scfg.kv_format
@@ -150,7 +168,8 @@ class ServingEngine:
                               else 1 + b * self._pmax)
             self.allocator = PageAllocator(self.num_pages, ps,
                                            metrics=self.metrics,
-                                           tracer=self.tracer)
+                                           tracer=self.tracer,
+                                           faults=self.faults)
             self.slot_pages = [SlotPages(ps) for _ in range(b)]
             # worst-case page reservations (admission control): pages a
             # slot may still grow into are committed but not yet allocated
@@ -163,7 +182,14 @@ class ServingEngine:
         self.engine = TransprecisionEngine(
             cfg, self.policy, b, L,
             num_pages=self.num_pages if self.paged else None,
-            attn_impl=attn_impl, tracer=self.tracer, metrics=self.metrics)
+            attn_impl=attn_impl, tracer=self.tracer, metrics=self.metrics,
+            faults=self.faults, retry=self.retry,
+            # the guard's fallback re-decode re-reads the pre-generate
+            # state, so a guarded engine must not donate it away
+            donate=False if self._guard_cfg is not None else None)
+        self.guard: Optional[NumericGuard] = (
+            NumericGuard(self, self._guard_cfg)
+            if self._guard_cfg is not None else None)
         self.cache = self.engine.init_decode_state()
         if self.paged:
             self.cache["page_table"] = jnp.asarray(self._table)
@@ -513,11 +539,33 @@ class ServingEngine:
             if not active:
                 return
         self.cache["tok"] = jnp.asarray(self.last_tok)
+        # guard-armed engines retain the pre-generate state (donate=False)
+        # so a quarantined slot can be re-decoded up the precision ladder
+        prev = self.cache if self.guard is not None else None
         self.cache, logits = self.engine.generate(self.params, self.cache)
+        logits = np.asarray(logits)
+        if self.faults is not None or self.guard is not None:
+            logits = np.array(logits, copy=True)   # writable host copy
+            poisons = {}
+            if self.faults is not None:
+                poisons = self.faults.poison_round(
+                    {i: self.slot_req[i].uid for i in active})
+                for i in poisons:
+                    logits[i] = np.nan
+            if self.guard is not None:
+                self.guard.check_round(prev, logits, active, poisons)
+                # ladder-exhausted requests terminated inside the guard:
+                # reclaim their slot + pages, drop them from this round
+                for i in active:
+                    r = self.slot_req[i]
+                    if r is not None and r.done:
+                        self._free_request_slot(i)
+                active = [i for i in active
+                          if self.slot_req[i] is not None]
         temps = np.asarray([0.0 if r is None else self._req_temp(r)
                             for r in self.slot_req], np.float32)
         with self.tracer.span("host.sample"):
-            toks = self._sample(np.asarray(logits), temps)
+            toks = self._sample(logits, temps)
         self.stats["decode_steps"] += 1
         for i in active:
             req = self.slot_req[i]
@@ -531,6 +579,23 @@ class ServingEngine:
                     or self.slot_pos[i] >= self.scfg.max_len - 1):
                 req.done = True
                 self._free_request_slot(i)
+
+    def abort(self, req: Request, error: Optional[str] = None) -> None:
+        """Terminally release ``req`` from outside the decode loop
+        (deadline expiry, cancellation, crash containment): free its
+        slot and pages if it is active, drop it from the eviction
+        requeue, and mark it done.  Idempotent; must run on the thread
+        driving the engine (the orchestrator's scheduler thread)."""
+        req.done = True
+        if error is not None and req.error is None:
+            req.error = error
+        for i, r in enumerate(self.slot_req):
+            if r is req:
+                self._free_request_slot(i)   # stamps finish (req.done)
+                return
+        if req in self._evicted:
+            self._evicted.remove(req)
+        req.timing.setdefault("finish", time.perf_counter())
 
     def _reject_reason(self, req: Request) -> Optional[str]:
         """Why ``req`` can NEVER be admitted (None = admissible once a

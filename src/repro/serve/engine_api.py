@@ -53,7 +53,7 @@ bound in ``tests/test_obs.py``).
 from __future__ import annotations
 
 import dataclasses
-from time import perf_counter
+from time import perf_counter, sleep
 from typing import Any, Dict, Optional
 
 import jax
@@ -211,9 +211,15 @@ class TransprecisionEngine:
                  donate: Optional[bool] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None,
-                 stage_prefix: str = ""):
+                 stage_prefix: str = "", faults=None, retry=None):
         self.cfg = cfg
         self.policy = get_policy(policy)
+        # chaos hardening (both default None = zero-cost): ``faults`` is a
+        # FaultInjector whose on_stage hook runs before every stage
+        # dispatch; ``retry`` is a RetryPolicy absorbing *transient* stage
+        # failures with bounded exponential backoff (serve/faults.py)
+        self.faults = faults
+        self.retry = retry
         # observability: spans + per-stage latency histograms while the
         # tracer is enabled (the speculative draft engine shares its
         # driver's tracer/registry under a "draft." stage prefix)
@@ -280,11 +286,13 @@ class TransprecisionEngine:
             self.stage_specs[name] = (fn, _abstract_args(args))
         tr = self.tracer
         if tr is None or not tr.enabled:
-            return fn(*args)
+            if self.faults is None and self.retry is None:
+                return fn(*args)
+            return self._invoke(name, fn, args)
         t0 = perf_counter()
         with jax.profiler.TraceAnnotation(name):
             with tr.span(name + ".dispatch", cat="engine"):
-                out = fn(*args)
+                out = self._invoke(name, fn, args)
         t1 = perf_counter()
         with tr.span(name + ".device", cat="engine"):
             jax.block_until_ready(out)
@@ -295,6 +303,37 @@ class TransprecisionEngine:
             self.metrics.histogram(f"stage.{name}.device_s").observe(
                 t2 - t1)
         return out
+
+    def _invoke(self, name, fn, args):
+        """One stage call behind the fault-injection and retry hooks
+        (plain call with neither armed).  Injection raises BEFORE the
+        stage dispatches, so a failed attempt never consumes donated
+        buffers; only exceptions flagged ``transient`` are retried, with
+        bounded exponential backoff (``stage.retries`` /
+        ``stage.<name>.retries`` counters; ``stage.retry_exhausted``
+        when the budget runs out and the failure propagates)."""
+        faults, retry = self.faults, self.retry
+        if faults is None and retry is None:
+            return fn(*args)
+        tries = 0
+        while True:
+            try:
+                if faults is not None:
+                    faults.on_stage(name)
+                return fn(*args)
+            except Exception as e:
+                transient = bool(getattr(e, "transient", False))
+                tries += 1
+                if retry is None or not transient \
+                        or tries >= retry.max_attempts:
+                    if transient and retry is not None \
+                            and self.metrics is not None:
+                        self.metrics.counter("stage.retry_exhausted").inc()
+                    raise
+                if self.metrics is not None:
+                    self.metrics.counter("stage.retries").inc()
+                    self.metrics.counter(f"stage.{name}.retries").inc()
+                sleep(retry.delay(tries - 1))
 
     # ---- stage: decode-state construction ----
     def init_decode_state(self) -> Dict[str, Any]:

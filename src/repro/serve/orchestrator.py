@@ -19,6 +19,35 @@ background threads:
   fires per-token streaming callbacks, so Python-side string work never
   blocks the next ``generate`` dispatch.
 
+Robustness (the chaos-hardened lifecycle; ``tests/test_chaos.py``):
+
+* **every submitted request reaches a terminal state.**  ``_finish`` is
+  idempotent (``_terminal`` flag under a lock), so deadline expiry,
+  cancellation, loop crashes and normal completion can race without a
+  double release or a stranded waiter;
+* **deadlines + cancellation** — ``StreamingRequest.deadline_s`` (or the
+  config-wide ``deadline_s``) expires a request relative to its submit
+  stamp with terminal ``error="deadline"``; ``StreamingRequest.cancel()``
+  is honored mid-decode with ``error="cancelled"``.  Both paths abort the
+  engine side first (slot + pages reclaimed) on the scheduler thread;
+* **crash containment** — a scheduler- or detokenizer-loop death fails
+  every queued and in-flight request with an error, reclaims engine
+  slots/pages, flips ``healthy`` to False (``submit`` then raises), and
+  records the first worker exception, which ``__exit__`` re-raises and
+  ``health()`` reports;
+* a **watchdog thread** (``watchdog_s``) fails in-flight requests when
+  the scheduler makes no progress for that long with work in flight —
+  a stuck ``generate`` round degrades to fast errors instead of hangs;
+* ``close`` raises on leaked (still-alive) worker threads instead of
+  silently returning, and finishes any stragglers once both loops are
+  down.
+
+Fault injection (:mod:`repro.serve.faults`) hooks the scheduler tick,
+tokenize and detokenize paths here (``sched_crash`` / ``tokenize_crash``
+/ ``detok_crash``); the injector is shared with the engine
+(``engine.faults``).  All hooks are ``is not None`` checks — disabled
+costs nothing.
+
 Tokenisation is pluggable (``tokenize``/``detokenize`` callables); the
 default is a byte-level codec clipped to the model vocab, which is enough
 for the synthetic-data models this repo trains.  Timing is recorded
@@ -29,16 +58,18 @@ touching the engine.
 
 Telemetry rides the engine's :class:`repro.obs.MetricsRegistry` under the
 ``orch.`` prefix (``orch.submitted`` / ``finished`` / ``rejected`` /
-``admission_timeouts`` counters, ``orch.queue_depth`` gauge) and the
-engine's tracer: scheduler-loop segments get host spans (``orch.pull``,
-``orch.admit``, ``orch.step``, ``orch.retire``, ``orch.idle``) and the
-detokenizer thread gets ``cat="detok"`` spans, which the stage-breakdown
-report counts as concurrent rather than wall-clock.
+``admission_timeouts`` / ``cancelled`` / ``deadline_expired`` /
+``watchdog_fired`` / ``loop_crashes`` counters, ``orch.queue_depth``
+gauge) and the engine's tracer: scheduler-loop segments get host spans
+(``orch.pull``, ``orch.admit``, ``orch.step``, ``orch.retire``,
+``orch.reap``, ``orch.idle``) and the detokenizer thread gets
+``cat="detok"`` spans, which the stage-breakdown report counts as
+concurrent rather than wall-clock.
 
 Threading contract: the engine is only ever touched from the scheduler
-thread; ``submit``/``wait`` are safe from any thread.  Callbacks run on
-the detokenizer thread and must not call back into the orchestrator
-(except ``submit``).
+thread; ``submit``/``wait``/``cancel``/``health`` are safe from any
+thread.  Callbacks run on the detokenizer thread and must not call back
+into the orchestrator (except ``submit``).
 """
 from __future__ import annotations
 
@@ -48,7 +79,7 @@ import queue
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -71,6 +102,14 @@ class OrchestratorConfig:
     poll_interval_s: scheduler sleep when there is nothing to do.
     detokenize: decode emitted tokens to text on the detokenizer thread
         (False streams token ids only; text fields stay empty).
+    deadline_s: default per-request deadline, measured from the submit
+        stamp; on expiry the request terminates with ``error="deadline"``
+        and its slot + pages are reclaimed.  A request's own
+        ``deadline_s`` overrides this; None disables.
+    watchdog_s: arm a watchdog thread that fails all in-flight requests
+        (``error`` mentioning the watchdog, orchestrator marked
+        unhealthy) when the scheduler completes no iteration for this
+        long while work is in flight.  None disables.
     ttft_slo_s / itl_slo_s: latency SLO thresholds.  When set, every
         finished request's TTFT (and every inter-token gap) is checked
         against them and ``orch.slo.ttft_violations`` /
@@ -86,6 +125,8 @@ class OrchestratorConfig:
     batch_window_s: float = 0.0
     poll_interval_s: float = 0.001
     detokenize: bool = True
+    deadline_s: Optional[float] = None
+    watchdog_s: Optional[float] = None
     ttft_slo_s: Optional[float] = None
     itl_slo_s: Optional[float] = None
     request_log: Optional[str] = None
@@ -99,11 +140,14 @@ class StreamingRequest:
     ``on_token(sreq, token_ids, text_piece)`` fires on the detokenizer
     thread once per emission batch — batches hold >1 token under
     speculative decoding because accepted drafts commit together.
+    ``deadline_s`` (submit-relative) and :meth:`cancel` terminate the
+    stream early with ``error="deadline"`` / ``"cancelled"``.
     """
     prompt: Union[str, Sequence[int]]
     max_new: int = 32
     temperature: Optional[float] = None   # None inherits ServeConfig's
     on_token: Optional[Callable[["StreamingRequest", List[int], str], None]] = None
+    deadline_s: Optional[float] = None    # None inherits the config's
 
     # outputs / telemetry (filled in by the orchestrator)
     out_tokens: List[int] = dataclasses.field(default_factory=list)
@@ -115,10 +159,26 @@ class StreamingRequest:
     _req: Optional[Request] = dataclasses.field(default=None, repr=False)
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False)
+    _cancel: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+    # terminal-once flag; only _finish flips it (under the orchestrator's
+    # terminal lock), making every terminal path idempotent
+    _terminal: bool = dataclasses.field(default=False, repr=False)
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         """Block until the stream finishes; True if it did."""
         return self._done.wait(timeout)
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation: the scheduler aborts the
+        stream at its next tick (terminal ``error="cancelled"``, slot
+        and pages reclaimed).  Safe from any thread, no-op once the
+        stream is already terminal."""
+        self._cancel.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancel.is_set()
 
     @property
     def done(self) -> bool:
@@ -137,8 +197,15 @@ class StreamingRequest:
         """The engine's per-request ``perf_counter`` stamps, in lifecycle
         order (submit → admit → prefill_done → insert_done → first_token
         → finish).  Rejected requests carry only submit + finish; keys a
-        request never reached are absent."""
-        timing = self._req.timing if self._req is not None else {}
+        request never reached are absent.  Requests that never got an
+        engine-side Request (e.g. failed before tokenization) still
+        carry the orchestrator's own submit/finish stamps — every
+        terminal path has both."""
+        timing = dict(self._req.timing) if self._req is not None else {}
+        if self.submit_t:
+            timing.setdefault("submit", self.submit_t)
+        if self.finish_t:
+            timing.setdefault("finish", self.finish_t)
         order = ("submit", "admit", "prefill_done", "insert_done",
                  "first_token", "finish")
         return {k: timing[k] for k in order if k in timing}
@@ -188,7 +255,9 @@ class Orchestrator:
                                     on_token=lambda r, ids, s: print(s))
             assert orch.submit(sreq)
             sreq.wait()
-    """
+
+    ``__exit__`` re-raises the first worker-thread exception (as the
+    cause of a RuntimeError) if a loop crashed during the block."""
 
     def __init__(self, engine: ServingEngine,
                  ocfg: OrchestratorConfig = OrchestratorConfig(), *,
@@ -201,19 +270,33 @@ class Orchestrator:
         vocab = engine.cfg.vocab
         self.tokenize = tokenize or _default_tokenize(vocab)
         self.detokenize = detokenize or _default_detokenize(vocab)
+        # fault-injection hooks for the orchestrator's own sites
+        # (sched/tokenize/detok) share the engine's injector
+        self.faults = getattr(engine, "faults", None)
 
         self._slots = threading.BoundedSemaphore(ocfg.max_queue)
         self._submitted: "queue.Queue[StreamingRequest]" = queue.Queue()
         self._stream_q: "queue.Queue[tuple]" = queue.Queue()
         self._by_req: Dict[int, StreamingRequest] = {}  # id(Request) -> sreq
+        self._pending: deque = deque()     # scheduler thread only
         self._closed = False
         self._uid = 0
         self._stop = threading.Event()
+        # ---- robustness state ----
+        self._healthy = True
+        self._fail_reason: Optional[str] = None
+        self._worker_exc: Optional[BaseException] = None
+        self._term_lock = threading.Lock()   # _terminal + _worker_exc
+        self._detok_gate = threading.Lock()  # _detok_dead + "done" enqueue
+        self._detok_dead = False
+        self._beat = time.perf_counter()     # scheduler progress heartbeat
         self.tracer = engine.tracer
         self.metrics = engine.metrics
         self.stats = StatsView(self.metrics, prefix="orch.")
         self.stats.bind_counters("submitted", "finished", "rejected",
-                                 "admission_timeouts")
+                                 "admission_timeouts", "cancelled",
+                                 "deadline_expired", "watchdog_fired",
+                                 "loop_crashes")
         self._queue_depth = self.metrics.gauge("orch.queue_depth")
         # lifecycle latency distributions + SLO accounting (scheduler
         # thread only; Histogram.observe is locked anyway)
@@ -232,16 +315,26 @@ class Orchestrator:
                                        name="orch-scheduler", daemon=True)
         self._detok = threading.Thread(target=self._detok_loop,
                                        name="orch-detok", daemon=True)
+        self._wd: Optional[threading.Thread] = None
+        self._wd_stop = threading.Event()
         self._sched.start()
         self._detok.start()
+        if ocfg.watchdog_s is not None:
+            self._wd = threading.Thread(target=self._watchdog_loop,
+                                        name="orch-watchdog", daemon=True)
+            self._wd.start()
 
     # ---- submission side (any thread) ----
     def submit(self, sreq: StreamingRequest,
                timeout: Optional[float] = None) -> bool:
         """Enqueue a request; False if backpressure held past ``timeout``
-        (default: the config admission timeout)."""
+        (default: the config admission timeout).  Raises once the
+        orchestrator is closed or unhealthy (a worker loop died)."""
         if self._closed:
             raise RuntimeError("orchestrator is closed")
+        if not self._healthy:
+            raise RuntimeError(
+                f"orchestrator is unhealthy: {self._fail_reason}")
         if timeout is None:
             timeout = self.ocfg.admission_timeout_s
         blocking = timeout > 0
@@ -256,6 +349,47 @@ class Orchestrator:
         self._queue_depth.set(self._submitted.qsize())
         return True
 
+    # ---- health (any thread) ----
+    @property
+    def healthy(self) -> bool:
+        """False once a worker loop died or the watchdog fired."""
+        return self._healthy
+
+    @property
+    def worker_exc(self) -> Optional[BaseException]:
+        """First exception that killed a worker loop (None = none yet)."""
+        return self._worker_exc
+
+    def health(self) -> Dict[str, Any]:
+        """Point-in-time health snapshot (thread-safe, JSON-friendly):
+        liveness flags, the first failure, thread liveness, in-flight
+        depth, engine slot/page occupancy and the robustness counters
+        (``orch.*`` / ``faults.*`` / ``guard.*`` / stage retries).
+        Surfaced by ``launch/serve.py --health``."""
+        c = self.metrics.snapshot()["counters"]
+        keep = ("orch.", "faults.", "guard.")
+        threads = {t.name: t.is_alive()
+                   for t in (self._sched, self._detok, self._wd)
+                   if t is not None}
+        alloc = getattr(self.engine, "allocator", None)
+        return {
+            "healthy": self._healthy,
+            "closed": self._closed,
+            "error": self._fail_reason,
+            "worker_exc": (repr(self._worker_exc)
+                           if self._worker_exc is not None else None),
+            "threads": threads,
+            "in_flight": len(self._by_req) + self._submitted.qsize(),
+            "engine": {
+                "free_slots": self.engine.free_slots(),
+                "live_pages": (alloc.live_pages
+                               if alloc is not None else None)},
+            "counters": {k: v for k, v in sorted(c.items())
+                         if k.startswith(keep)
+                         or k == "stage.retries"
+                         or k == "stage.retry_exhausted"},
+        }
+
     # ---- scheduler thread ----
     def _on_emit(self, req: Request, toks: List[int]) -> None:
         sreq = self._by_req.get(id(req))
@@ -266,6 +400,14 @@ class Orchestrator:
         self._stream_q.put(("toks", sreq, list(toks)))
 
     def _finish(self, sreq: StreamingRequest, error: Optional[str] = None):
+        """Terminal transition for one stream.  Idempotent — the first
+        caller wins (normal retire, deadline/cancel reap, crash
+        containment and close-time backstop may race); every path ends
+        with ``_done`` set and the backpressure slot released."""
+        with self._term_lock:
+            if sreq._terminal:
+                return
+            sreq._terminal = True
         sreq.error = error
         sreq.finish_t = time.perf_counter()
         if sreq._req is not None:
@@ -276,12 +418,18 @@ class Orchestrator:
             sreq._req.timing.setdefault("finish", sreq.finish_t)
         self._observe_slo(sreq)
         self.stats["rejected" if error else "finished"] += 1
-        self._stream_q.put(("done", sreq))
+        with self._detok_gate:
+            if self._detok_dead:
+                # the detokenizer is gone: resolve the waiter directly
+                # instead of enqueueing for a dead consumer
+                sreq._done.set()
+            else:
+                self._stream_q.put(("done", sreq))
         self._slots.release()
 
     def _observe_slo(self, sreq: StreamingRequest) -> None:
         """Latency histograms + SLO violation counters for one terminal
-        request (scheduler thread)."""
+        request."""
         d = sreq.lifecycle_deltas()
         if "queue_wait_s" in d:
             self._h_qwait.observe(d["queue_wait_s"])
@@ -299,10 +447,71 @@ class Orchestrator:
                 if gap > self.ocfg.itl_slo_s:
                     self._slo["itl_violations"].inc()
 
-    def _scheduler_loop(self) -> None:
-        eng, ocfg, tracer = self.engine, self.ocfg, self.tracer
-        pending: deque = deque()
+    def _record_worker_exc(self, exc: BaseException) -> None:
+        with self._term_lock:
+            if self._worker_exc is None:
+                self._worker_exc = exc
+
+    def _contain(self, reason: str, *, engine_safe: bool) -> None:
+        """Crash containment: mark the orchestrator unhealthy and finish
+        EVERY queued or in-flight request with ``reason`` — no stream is
+        ever stranded behind a dead loop.  ``engine_safe`` means we are
+        on the scheduler thread (the only thread allowed to touch the
+        engine), so slots/pages are reclaimed too; other threads leave
+        engine cleanup to the scheduler, which runs containment again on
+        its next iteration when it observes ``healthy == False``."""
+        self._healthy = False
+        if self._fail_reason is None:
+            self._fail_reason = reason
+        if engine_safe:
+            eng = self.engine
+            try:
+                for r in list(eng._evicted):
+                    eng.abort(r, error=reason)
+                for r in list(eng.slot_req):
+                    if r is not None:
+                        eng.abort(r, error=reason)
+            except Exception:
+                # a corrupted engine must not block failing the streams
+                pass
         while True:
+            try:
+                sreq = self._submitted.get_nowait()
+            except queue.Empty:
+                break
+            self._finish(sreq, error=reason)
+        for sreq in list(self._by_req.values()):
+            self._finish(sreq, error=sreq.error or reason)
+        if engine_safe:
+            self._by_req.clear()
+            self._pending.clear()
+        self._queue_depth.set(0)
+
+    def _scheduler_loop(self) -> None:
+        try:
+            self._scheduler_body()
+        except BaseException as e:  # containment must see everything
+            self._record_worker_exc(e)
+            self.stats["loop_crashes"] += 1
+            self._contain(f"scheduler loop crashed: {e!r}",
+                          engine_safe=True)
+        finally:
+            # graceful exit and crash exit both stop the detokenizer
+            self._stream_q.put(("stop",))
+
+    def _scheduler_body(self) -> None:
+        eng, ocfg, tracer = self.engine, self.ocfg, self.tracer
+        pending = self._pending
+        while True:
+            self._beat = time.perf_counter()
+            if not self._healthy:
+                # another thread (watchdog / detokenizer) initiated
+                # containment; do the engine-side half here and exit
+                self._contain(self._fail_reason or "orchestrator unhealthy",
+                              engine_safe=True)
+                return
+            if self.faults is not None:
+                self.faults.on_sched()
             # pull new submissions; filter out the never-admissible
             fresh = False
             with tracer.span("orch.pull"):
@@ -311,7 +520,14 @@ class Orchestrator:
                         sreq = self._submitted.get_nowait()
                     except queue.Empty:
                         break
-                    sreq._req = self._to_engine_request(sreq)
+                    try:
+                        sreq._req = self._to_engine_request(sreq)
+                    except BaseException as e:
+                        # the popped request is in neither queue nor
+                        # _by_req — finish it before containment runs,
+                        # or it would be the one stream left stranded
+                        self._finish(sreq, error=f"tokenize failed: {e!r}")
+                        raise
                     reject = eng._reject_reason(sreq._req)
                     if reject is not None:
                         self._finish(sreq, error=reject)
@@ -325,6 +541,8 @@ class Orchestrator:
                     for r in reversed(evicted):
                         pending.appendleft(self._by_req[id(r)])
                 self._queue_depth.set(len(pending))
+            # cancellations + expired deadlines before spending a tick
+            self._reap()
             if fresh and ocfg.batch_window_s > 0 and eng.free_slots():
                 with tracer.span("orch.idle", kind="batch_window"):
                     time.sleep(ocfg.batch_window_s)   # coalesce one batch
@@ -354,13 +572,42 @@ class Orchestrator:
                     self._finish(s, error=s._req.error)
             if self._stop.is_set() and not pending and not active \
                     and self._submitted.empty() and not eng._evicted:
-                self._stream_q.put(("stop",))
                 return
             if not active and not pending:
                 with tracer.span("orch.idle", kind="poll"):
                     time.sleep(ocfg.poll_interval_s)
 
+    def _reap(self) -> None:
+        """Terminate cancelled and deadline-expired requests (scheduler
+        thread): abort the engine side first — slot and pages reclaimed —
+        then finish with the terminal error."""
+        now = time.perf_counter()
+        doomed = []
+        for sreq in list(self._by_req.values()):
+            if sreq._terminal:
+                continue
+            if sreq._cancel.is_set():
+                doomed.append((sreq, "cancelled"))
+                continue
+            dl = (sreq.deadline_s if sreq.deadline_s is not None
+                  else self.ocfg.deadline_s)
+            if dl is not None and now - sreq.submit_t > dl:
+                doomed.append((sreq, "deadline"))
+        if not doomed:
+            return
+        with self.tracer.span("orch.reap", n=len(doomed)):
+            for sreq, err in doomed:
+                if sreq in self._pending:
+                    self._pending.remove(sreq)
+                self._by_req.pop(id(sreq._req), None)
+                self.engine.abort(sreq._req, error=err)
+                self._finish(sreq, error=err)
+                self.stats["cancelled" if err == "cancelled"
+                           else "deadline_expired"] += 1
+
     def _to_engine_request(self, sreq: StreamingRequest) -> Request:
+        if self.faults is not None:
+            self.faults.on_tokenize()
         toks = (self.tokenize(sreq.prompt)
                 if isinstance(sreq.prompt, str) else
                 [int(t) for t in sreq.prompt])
@@ -372,8 +619,46 @@ class Orchestrator:
         req.timing["submit"] = sreq.submit_t
         return req
 
+    # ---- watchdog thread ----
+    def _watchdog_loop(self) -> None:
+        wd = self.ocfg.watchdog_s
+        tick = max(min(wd / 4.0, 0.25), 0.005)
+        while not self._wd_stop.wait(tick):
+            busy = bool(self._by_req) or not self._submitted.empty()
+            stale = time.perf_counter() - self._beat
+            if busy and stale > wd and self._healthy:
+                self.stats["watchdog_fired"] += 1
+                msg = (f"watchdog: scheduler made no progress for "
+                       f"{stale:.2f}s (> {wd}s) with work in flight")
+                self._record_worker_exc(RuntimeError(msg))
+                # fail the waiters NOW; the scheduler (if it ever
+                # recovers) sees unhealthy and reclaims the engine side
+                self._contain(msg, engine_safe=False)
+                return
+
     # ---- detokenizer thread ----
     def _detok_loop(self) -> None:
+        try:
+            self._detok_body()
+        except BaseException as e:
+            self._record_worker_exc(e)
+            self.stats["loop_crashes"] += 1
+            with self._detok_gate:
+                # flag first, then drain: under the gate no "done" can be
+                # enqueued concurrently, and every later _finish resolves
+                # its waiter directly
+                self._detok_dead = True
+                while True:
+                    try:
+                        item = self._stream_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if item[0] == "done":
+                        item[1]._done.set()
+            self._contain(f"detokenizer loop crashed: {e!r}",
+                          engine_safe=False)
+
+    def _detok_body(self) -> None:
         while True:
             item = self._stream_q.get()
             if item[0] == "stop":
@@ -386,6 +671,8 @@ class Orchestrator:
                 item[1]._done.set()
                 continue
             _, sreq, toks = item
+            if self.faults is not None:
+                self.faults.on_detok()
             # cat="detok" → the breakdown report counts this thread's work
             # as concurrent with the scheduler, not extra wall time
             with self.tracer.span("orch.detok", cat="detok", n=len(toks)):
@@ -416,19 +703,52 @@ class Orchestrator:
 
     # ---- lifecycle ----
     def close(self, timeout: Optional[float] = 60.0) -> None:
-        """Drain in-flight work, then stop both threads."""
+        """Drain in-flight work, then stop all worker threads.
+
+        Raises RuntimeError if a worker thread is still alive after
+        ``timeout`` — a leaked thread means a stuck scheduler or
+        detokenizer, and silently returning used to mask exactly that.
+        Once both loops are down, any straggler requests (submitted
+        around the stop, or stranded by a crash) are finished with an
+        error so no waiter hangs."""
         if self._closed:
             return
         self._closed = True
         self._stop.set()
         self._sched.join(timeout)
         self._detok.join(timeout)
+        self._wd_stop.set()
+        if self._wd is not None:
+            self._wd.join(timeout)
+        leaked = [t.name for t in (self._sched, self._detok)
+                  if t.is_alive()]
+        if not leaked:
+            with self._detok_gate:
+                self._detok_dead = True   # finish() resolves waiters now
+            err = self._fail_reason or "orchestrator closed"
+            while True:
+                try:
+                    sreq = self._submitted.get_nowait()
+                except queue.Empty:
+                    break
+                self._finish(sreq, error=err)
+            for sreq in list(self._by_req.values()):
+                self._finish(sreq, error=sreq.error or err)
+            self._by_req.clear()
         if self._reqlog is not None:
             with self._reqlog_lock:
                 self._reqlog.close()
+        if leaked:
+            raise RuntimeError(
+                f"orchestrator close(timeout={timeout}) leaked threads: "
+                f"{leaked} — scheduler or detokenizer failed to stop")
 
     def __enter__(self) -> "Orchestrator":
         return self
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
+        if exc_type is None and self._worker_exc is not None:
+            raise RuntimeError(
+                f"orchestrator worker crashed: {self._fail_reason}"
+            ) from self._worker_exc

@@ -43,7 +43,7 @@ class PageAllocator:
     is enabled."""
 
     def __init__(self, num_pages: int, page_size: int, *,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, faults=None):
         if num_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is the trash page)")
         if page_size < 1:
@@ -52,6 +52,9 @@ class PageAllocator:
         self.page_size = page_size
         self.metrics = metrics
         self.tracer = tracer
+        # optional FaultInjector (serve/faults.py): pool_dry faults force
+        # alloc to report a dry pool, fork_fail faults raise from fork
+        self.faults = faults
         # LIFO free list keeps recently-freed (cache-warm) pages hot
         self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._refs = np.zeros(num_pages, np.int32)
@@ -91,7 +94,8 @@ class PageAllocator:
         all-or-nothing, so a partially admissible request never strands
         pages."""
         with self._span("alloc"):
-            if n > len(self._free):
+            if n > len(self._free) or (
+                    self.faults is not None and self.faults.on_alloc(n)):
                 if self.metrics is not None:
                     self.metrics.counter("pages.alloc_failures").inc()
                 return None
@@ -141,6 +145,8 @@ class PageAllocator:
         All-or-nothing: forking a freed / trash / out-of-range page raises
         before any refcount moves."""
         with self._span("fork"):
+            if self.faults is not None:
+                self.faults.on_fork()
             self._check_pages(pages, "fork")
             for p in pages:
                 self._refs[p] += 1
@@ -149,6 +155,35 @@ class PageAllocator:
 
     def ref_count(self, page: int) -> int:
         return int(self._refs[page])
+
+    def assert_consistent(self) -> None:
+        """Allocator invariant check, O(num_pages): the free list and the
+        refcounted (live) set partition the non-trash pages exactly —
+        every page is free with refcount 0 or allocated with refcount
+        >= 1, the free list holds no duplicates, and the trash page is
+        permanently referenced and never free.  Raises AssertionError
+        with the offending pages; call from test teardown and the chaos
+        suite (a leak or double-free shows up here even when the engine
+        happens to keep working)."""
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):
+            dup = [p for p, n in Counter(self._free).items() if n > 1]
+            raise AssertionError(f"free list holds duplicates: {dup}")
+        if TRASH_PAGE in free_set:
+            raise AssertionError("trash page 0 is on the free list")
+        if self._refs[TRASH_PAGE] != 1:
+            raise AssertionError(
+                f"trash page refcount {int(self._refs[TRASH_PAGE])} != 1")
+        if (self._refs < 0).any():
+            bad = np.nonzero(self._refs < 0)[0].tolist()
+            raise AssertionError(f"negative refcounts on pages {bad}")
+        bad = [p for p in range(1, self.num_pages)
+               if (p in free_set) == (self._refs[p] > 0)]
+        if bad:
+            detail = {p: (int(self._refs[p]), p in free_set) for p in bad}
+            raise AssertionError(
+                "refcount/free-list mismatch (page: (refs, on_free)): "
+                f"{detail}")
 
 
 @dataclasses.dataclass

@@ -78,16 +78,23 @@ class SpeculativeEngine(ServingEngine):
     def __init__(self, cfg: lm.ModelCfg, params, scfg: ServeConfig,
                  policy: TCPolicy = BF16, *, gamma: int = 4,
                  draft_weights_fmt: str = "posit8_2",
-                 draft_kv_format: str = "posit8", tracer=None):
+                 draft_kv_format: str = "posit8", tracer=None,
+                 faults=None, retry=None, guard=None):
         if gamma < 1:
             raise ValueError(f"gamma must be >= 1, got {gamma}")
+        if guard:
+            raise ValueError(
+                "the numeric guard is a base-engine decode-round policy; "
+                "speculative verify-round quarantine is a follow-on "
+                "(pass guard=None)")
         if any(bt != "attn" for bt in cfg.block_types) or cfg.window \
                 or cfg.family in ("moe", "audio"):
             raise ValueError(
                 "speculative decoding needs a decoder-only attention "
                 "stack without MoE or sliding windows (rollback is a row "
                 f"rewind); {cfg.name} is not one")
-        super().__init__(cfg, params, scfg, policy, tracer=tracer)
+        super().__init__(cfg, params, scfg, policy, tracer=tracer,
+                         faults=faults, retry=retry)
         self.gamma = gamma
         self._T = gamma + 1                     # max verify chunk length
         if scfg.max_len <= 2:
@@ -101,7 +108,8 @@ class SpeculativeEngine(ServingEngine):
         # up under "draft.generate" etc., separate from the target stages
         self.draft_engine = TransprecisionEngine(
             cfg, self.draft, b, L, tracer=self.tracer,
-            metrics=self.metrics, stage_prefix="draft.")
+            metrics=self.metrics, stage_prefix="draft.",
+            faults=self.faults, retry=self.retry)
         self.draft_cache = self.draft_engine.init_decode_state()
         self.draft_pos = np.zeros(b, np.int64)  # committed draft rows/slot
         # committed token the draft cache is missing (all-accepted rounds

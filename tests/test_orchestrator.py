@@ -116,3 +116,68 @@ def test_text_prompt_roundtrip(smoke_model):
         assert s.wait(120.0)
     assert len(s.out_tokens) == 4
     assert len(s.out_text) > 0
+
+
+def test_cancel_before_admission_and_after_finish(smoke_model):
+    """Error-path ordering: a cancel set before the scheduler ever sees
+    the request terminates it without engine work; a cancel after the
+    stream finished is a no-op (the first terminal transition wins)."""
+    cfg, params, prompts = smoke_model
+    eng = _engine(cfg, params)
+    with Orchestrator(eng, OrchestratorConfig()) as orch:
+        early = StreamingRequest(prompts[0], max_new=8)
+        early.cancel()                       # cancelled while queued
+        assert orch.submit(early, timeout=30.0)
+        assert early.wait(60.0)
+        assert early.error == "cancelled" and early.out_tokens == []
+
+        done = StreamingRequest(prompts[1], max_new=4)
+        assert orch.submit(done, timeout=30.0)
+        assert done.wait(120.0)
+        assert done.error is None
+        done.cancel()                        # post-terminal: no-op
+        assert done.error is None and len(done.out_tokens) == 4
+    # a terminal stream stays terminal through close() too
+    assert done.error is None
+
+
+def test_lifecycle_stamps_on_every_terminal_path(smoke_model):
+    """Every terminal path — finished, rejected, cancelled — carries
+    monotonic submit/finish stamps; richer paths add the middle ones."""
+    cfg, params, prompts = smoke_model
+    eng = _engine(cfg, params)
+    with Orchestrator(eng, OrchestratorConfig()) as orch:
+        ok = StreamingRequest(prompts[0], max_new=4)
+        rej = StreamingRequest(list(range(MAX_LEN + 1)), max_new=4)
+        can = StreamingRequest(prompts[1], max_new=8)
+        can.cancel()
+        for s in (ok, rej, can):
+            assert orch.submit(s, timeout=30.0)
+        for s in (ok, rej, can):
+            assert s.wait(120.0)
+    full = ok.lifecycle()
+    assert list(full) == ["submit", "admit", "prefill_done",
+                          "insert_done", "first_token", "finish"]
+    assert list(full.values()) == sorted(full.values())
+    d = ok.lifecycle_deltas()
+    assert d["total_s"] >= d["ttft_s"] >= d["queue_wait_s"] >= 0
+    for s in (rej, can):                      # terminal without decode
+        lc = s.lifecycle()
+        assert "submit" in lc and "finish" in lc
+        assert lc["finish"] >= lc["submit"]
+        assert "first_token" not in lc
+
+
+def test_wait_vs_error_vs_done_ordering(smoke_model):
+    """``wait`` returning True implies the terminal fields are already
+    readable: done is set last, after error/out_tokens/finish_t."""
+    cfg, params, prompts = smoke_model
+    eng = _engine(cfg, params)
+    with Orchestrator(eng, OrchestratorConfig(deadline_s=0.05)) as orch:
+        s = StreamingRequest(prompts[0], max_new=100_000)
+        assert orch.submit(s, timeout=30.0)
+        assert s.wait(60.0)
+        # no further settling: the terminal state is fully published
+        assert s.done and s.error == "deadline" and s.finish_t > 0
+        assert s.lifecycle()["finish"] >= s.lifecycle()["submit"]
+    assert eng.allocator is None or eng.allocator.live_pages == 0

@@ -212,6 +212,7 @@ def test_engine_slot_reuse_after_eos_frees_pages(smoke_model):
     assert all(len(r.out_tokens) >= 1 for r in reqs)
     assert stats["prefills"] == 5
     assert eng.allocator.live_pages == 0               # no page leaks
+    eng.allocator.assert_consistent()
     assert eng.kv_cache_live_bytes() == 0
     assert stats["peak_live_pages"] > 0
 
@@ -272,6 +273,7 @@ def test_engine_max_new_zero_reserves_first_append_page(smoke_model):
     eng.serve([req], max_ticks=50)
     assert req.done and len(req.out_tokens) == 1
     assert eng.allocator.live_pages == 0
+    eng.allocator.assert_consistent()
 
 
 @pytest.mark.parametrize("kvf", ["bf16", "posit8"])

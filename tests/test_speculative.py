@@ -296,6 +296,7 @@ def test_speculative_stream_identical_to_baseline(smoke_model, kvf, layout):
     assert 0 < stats["drafts_accepted"] <= stats["drafts_proposed"]
     if layout == "paged":
         assert spec.allocator.live_pages == 0         # no page leaks
+        spec.allocator.assert_consistent()
 
 
 def test_speculative_eos_stream_identical(smoke_model):
